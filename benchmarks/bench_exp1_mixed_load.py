@@ -1,0 +1,58 @@
+"""Exp1 (Fig. 2): mixed-load comparison of four scheduling paradigms.
+
+Sweeps offered load rho over {0.4 .. 0.9} for Laminar, Slurm-like, Ray-like
+and Flux-like on the same heterogeneous cluster, bimodal open-loop workload,
+identical network ground rules. Two-phase reservation is disabled for Laminar
+(as in the paper) to isolate hot-path behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import bench_cfg, emit, row_str
+from repro.core import LaminarEngine
+from repro.core.baselines import RUNNERS
+
+RHOS = (0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    for rho in RHOS:
+        cfg = bench_cfg(full=full, rho=rho, two_phase=False)
+        lam = LaminarEngine(cfg).run(seed=seed)
+        rows.append(
+            {
+                "paradigm": "laminar", "rho": rho,
+                "success": lam["start_success_ratio"],
+                "success_raw": lam["start_success_raw"],
+                "p50_ms": lam["p50_ms"], "p99_ms": lam["p99_ms"],
+                "control_us": lam["control_us_per_start"],
+            }
+        )
+        print("  " + row_str(rows[-1], ("paradigm", "rho", "success", "p99_ms")))
+        for name, runner in RUNNERS.items():
+            out = runner(cfg, seed=seed, capacity=1 << 15)
+            rows.append(
+                {
+                    "paradigm": name, "rho": rho,
+                    "success": out["start_success_ratio"],
+                    "success_raw": out["start_success_raw"],
+                    "p50_ms": out["p50_ms"], "p99_ms": out["p99_ms"],
+                    "control_us": float("nan"),
+                }
+            )
+            print("  " + row_str(rows[-1], ("paradigm", "rho", "success", "p99_ms")))
+    lam09 = next(r for r in rows if r["paradigm"] == "laminar" and r["rho"] == 0.9)
+    emit(
+        "exp1_mixed_load", rows, t0,
+        derived=f"laminar_rho0.9_success={lam09['success']:.4f};p99={lam09['p99_ms']:.1f}ms",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

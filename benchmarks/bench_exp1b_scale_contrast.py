@@ -1,0 +1,59 @@
+"""Exp1b: the coordination-bound crossover (companion to Exp1 / Fig. 2).
+
+Slurm-like's per-decision cost grows with N (global scan under the mutex)
+while lambda also grows with N, so saturation is scale-dependent: at the
+paper's 5,000 nodes it is saturated at every rho. CPU-default Exp1 runs at
+512 nodes (just past the crossover); this benchmark pins the contrast at
+2,048 nodes, rho = 0.8 — Laminar holds its success ratio while the
+globally-serialized baseline collapses on offered-load success (queue
+capacity drops included, as the paper's "infinite queuing disabled" rule
+requires).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import bench_cfg, emit, row_str
+from repro.core import LaminarEngine
+from repro.core.baselines import RUNNERS
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    nodes = 5000 if full else 2048
+    cfg = bench_cfg(full=full, num_nodes=nodes, rho=0.8, two_phase=False,
+                    horizon_ms=30_000.0 if full else 800.0)
+    rows = []
+    lam = LaminarEngine(cfg).run(seed=seed)
+    rows.append(
+        {
+            "paradigm": "laminar", "nodes": nodes,
+            "success": lam["start_success_ratio"],
+            "success_total": lam["start_success_raw"],
+            "p99_ms": lam["p99_ms"],
+        }
+    )
+    print("  " + row_str(rows[-1], ("paradigm", "nodes", "success_total", "p99_ms")))
+    out = RUNNERS["slurm"](cfg, seed=seed, capacity=1 << 17)
+    rows.append(
+        {
+            "paradigm": "slurm", "nodes": nodes,
+            "success": out["start_success_ratio"],
+            "success_total": out["start_success_total"],
+            "p99_ms": out["p99_ms"],
+        }
+    )
+    print("  " + row_str(rows[-1], ("paradigm", "nodes", "success_total", "p99_ms")))
+    emit(
+        "exp1b_scale_contrast", rows, t0,
+        derived=(
+            f"laminar={rows[0]['success_total']:.4f};"
+            f"slurm={rows[1]['success_total']:.4f}"
+        ),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Exp2 (Fig. 3): Laminar scale-out at fixed rho = 0.8.
+
+Paper: 5k/10k/20k/32k nodes; default CPU scale: 512/1k/2k/4k (same shape —
+zone count scales with cluster size, zone size fixed). The claim under test:
+p99 and success ratio do NOT degrade as the cluster grows.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import bench_cfg, emit, row_str
+from repro.core import LaminarEngine
+
+SIZES_FAST = (256, 512, 1024, 2048)
+SIZES_FULL = (5000, 10000, 20000, 32000)
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    for n in (SIZES_FULL if full else SIZES_FAST):
+        cfg = bench_cfg(full=full, num_nodes=n, rho=0.8, two_phase=False,
+                        horizon_ms=30_000.0 if full else 800.0)
+        out = LaminarEngine(cfg).run(seed=seed)
+        rows.append(
+            {
+                "nodes": n,
+                "success": out["start_success_ratio"],
+                "p50_ms": out["p50_ms"],
+                "p99_ms": out["p99_ms"],
+                "control_us": out["control_us_per_start"],
+                "lambda_per_s": out["lambda_per_s"],
+            }
+        )
+        print("  " + row_str(rows[-1], ("nodes", "success", "p99_ms", "control_us")))
+    p99s = [r["p99_ms"] for r in rows]
+    flat = max(p99s) / max(min(p99s), 1e-9)
+    emit("exp2_scaleout", rows, t0, derived=f"p99_spread_x={flat:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

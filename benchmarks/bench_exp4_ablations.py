@@ -1,0 +1,67 @@
+"""Exp4 (Fig. 6): mechanism ablations.
+
+Left: two-phase reservation vs squatters (rho = 0.5, regeneration off,
+squatter ratio {0.05, 0.10}).
+Right: DA regeneration vs probe loss (rho = 0.8, two-phase off, loss
+{0.1, 0.2, 0.3}).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import bench_cfg, emit, row_str
+from repro.core import LaminarEngine
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+
+    # --- two-phase reservation under squatters -----------------------------
+    for squat in (0.05, 0.10):
+        for two_phase in (False, True):
+            cfg = bench_cfg(full=full, rho=0.5, two_phase=two_phase,
+                            regeneration=False,
+                            horizon_ms=5000.0 if full else 1000.0)
+            cfg = dataclasses.replace(
+                cfg, workload=dataclasses.replace(cfg.workload, squatter_ratio=squat)
+            )
+            out = LaminarEngine(cfg).run(seed=seed)
+            rows.append(
+                {
+                    "ablation": "two_phase", "squatter_ratio": squat,
+                    "enabled": two_phase,
+                    "success": out["start_success_nonsquat"],
+                    "squat_expired": out["squat_expired"],
+                }
+            )
+            print("  " + row_str(rows[-1], ("ablation", "squatter_ratio", "enabled", "success")))
+
+    # --- DA regeneration under probe loss -----------------------------------
+    for loss in (0.1, 0.2, 0.3):
+        for regen in (False, True):
+            cfg = bench_cfg(full=full, rho=0.8, two_phase=False,
+                            regeneration=regen, hop_loss=loss)
+            out = LaminarEngine(cfg).run(seed=seed)
+            rows.append(
+                {
+                    "ablation": "regeneration", "loss": loss, "enabled": regen,
+                    "success": out["start_success_ratio"],
+                    "regen_spawned": out["regen_spawned"],
+                }
+            )
+            print("  " + row_str(rows[-1], ("ablation", "loss", "enabled", "success")))
+
+    tp = [r for r in rows if r["ablation"] == "two_phase"]
+    gain = (
+        sum(r["success"] for r in tp if r["enabled"])
+        - sum(r["success"] for r in tp if not r["enabled"])
+    ) / 2
+    emit("exp4_ablations", rows, t0, derived=f"two_phase_mean_gain={gain:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

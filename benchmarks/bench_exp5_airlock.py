@@ -1,0 +1,67 @@
+"""Exp5 (Fig. 7): runtime survival with Airlock under sustained memory
+pressure.
+
+Two otherwise identical configurations differing only in Airlock: dynamic
+memory perturbation on (thresholds 0.90/0.80, overclaim 0.3/0.5, drift 0.10,
+noise 0.1, bursts 0.02/0.25), two-phase + regeneration disabled. Tracks the
+end-of-run outcomes AND the time evolution (completed ratio, L-task OOM
+kills, probe dissipation, execution survival).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_cfg, emit, row_str
+from repro.core import LaminarEngine, MemoryConfig
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    series = {}
+    for airlock in (False, True):
+        cfg = bench_cfg(
+            full=full, rho=0.8, two_phase=False, regeneration=False,
+            hop_loss=0.0, airlock=airlock,
+            memory=MemoryConfig(enabled=True),
+            horizon_ms=30_000.0 if full else 1200.0,
+        )
+        out = LaminarEngine(cfg).run(seed=seed)
+        rows.append(
+            {
+                "airlock": airlock,
+                "completed_ratio": out["completed_success_ratio"],
+                "oom_kill_l": out["oom_kill_l"],
+                "oom_kill_f": out["oom_kill_f"],
+                "probe_drops": out["probe_drops"],
+                "exec_survival": out["exec_survival_ratio"],
+                "suspended": out["suspended_cnt"],
+                "resumed_insitu": out["resumed_insitu"],
+                "migrated": out["migrated"],
+                "reclaimed": out["reclaimed"],
+            }
+        )
+        ts = out["timeseries"]
+        series["airlock" if airlock else "baseline"] = {
+            "oom_l": ts["oom_kill_l"].tolist()[:: max(1, len(ts["oom_kill_l"]) // 200)],
+            "started": ts["started"].tolist()[:: max(1, len(ts["started"]) // 200)],
+            "reclaimed": ts["reclaimed"].tolist()[:: max(1, len(ts["reclaimed"]) // 200)],
+        }
+        print("  " + row_str(rows[-1], ("airlock", "completed_ratio", "oom_kill_l", "exec_survival", "probe_drops")))
+    on = rows[1]
+    emit(
+        "exp5_airlock", {"rows": rows, "timeseries": series}, t0,
+        derived=(
+            f"oom_l_with_airlock={on['oom_kill_l']};"
+            f"exec_survival={on['exec_survival']:.4f}"
+        ),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

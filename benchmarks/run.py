@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (us_per_call = wall
+time of the whole benchmark; ``derived`` carries the headline numbers), and
+persists full row data under ``results/bench/*.json`` for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only exp1,...] [--full] [--seed N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_control_work,
+    bench_exp1_mixed_load,
+    bench_exp1b_scale_contrast,
+    bench_exp2_scaleout,
+    bench_exp3_staleness,
+    bench_exp4_ablations,
+    bench_exp5_airlock,
+    bench_hotpath,
+    bench_moe_router,
+    bench_serving,
+)
+
+BENCHES = {
+    "exp1": bench_exp1_mixed_load.run,
+    "exp1b": bench_exp1b_scale_contrast.run,
+    "exp2": bench_exp2_scaleout.run,
+    "exp3": bench_exp3_staleness.run,
+    "exp4": bench_exp4_ablations.run,
+    "exp5": bench_exp5_airlock.run,
+    "control_work": bench_control_work.run,
+    "hotpath": bench_hotpath.run,
+    "moe_router": bench_moe_router.run,
+    "serving": bench_serving.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    ap.add_argument("--full", action="store_true", help="paper-scale geometry")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    keys = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for k in keys:
+        try:
+            BENCHES[k](full=args.full, seed=args.seed)
+        except Exception:
+            traceback.print_exc()
+            print(f"{k},nan,FAILED")
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

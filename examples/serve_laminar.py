@@ -1,0 +1,15 @@
+"""End-to-end serving driver: batched requests with declared priorities are
+scheduled probe-first onto replica KV-page pools and decoded by a real
+(reduced) model; under page pressure the Airlock ladder protects
+high-priority sequences.
+
+    PYTHONPATH=src python examples/serve_laminar.py --arch qwen3-1.7b
+"""
+
+import runpy
+import sys
+
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--smoke"] + sys.argv[1:]
+    runpy.run_module("repro.launch.serve", run_name="__main__")

@@ -1,0 +1,150 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from results/*.
+
+Reads results/dryrun/*.json, results/roofline/*.json, results/bench/*.json
+and writes markdown tables to results/generated_sections.md for inclusion in
+EXPERIMENTS.md. Deterministic: re-run after any sweep refresh.
+"""
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "results" / "dryrun"
+ROOF = ROOT / "results" / "roofline"
+BENCH = ROOT / "results" / "bench"
+OUT = ROOT / "results" / "generated_sections.md"
+
+ARCH_ORDER = [
+    "qwen2.5-32b", "gemma2-9b", "qwen3-1.7b", "qwen1.5-110b", "olmoe-1b-7b",
+    "phi3.5-moe-42b-a6.6b", "recurrentgemma-2b", "whisper-base",
+    "qwen2-vl-7b", "mamba2-130m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def gb(x):
+    return f"{x / 2**30:.2f}" if x is not None else "-"
+
+
+def load(p):
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def dryrun_table(pod: str) -> str:
+    rows = [
+        "| arch | shape | status | devices | arg GiB/dev | temp GiB/dev | "
+        "HLO GFLOP/dev | coll GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = load(DRY / f"{a}__{s}__{pod}.json")
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | **{r['status']}** | - | - | - | - | - | - |")
+                continue
+            m, c = r["memory"], r["cost"]
+            coll = r["collectives"].get("total_bytes", 0)
+            rows.append(
+                f"| {a} | {s} | ok | {r['devices']} | {gb(m['argument_bytes'])} "
+                f"| {gb(m['temp_bytes'])} | {c['flops'] / 1e9:.1f} "
+                f"| {gb(coll)} | {r['compile_s']} |"
+            )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO | roofline frac | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = load(ROOF / f"{a}__{s}.json")
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | - | - | - | {r['status']} | - | - | - |")
+                continue
+            rows.append(
+                f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                f"| {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+                f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.4f} "
+                f"| {r.get('suggestion','-')} |"
+            )
+    return "\n".join(rows)
+
+
+def perf_variants_table() -> str:
+    rows = [
+        "| cell | variant | compute s | memory s | collective s | dominant | "
+        "roofline frac | vs baseline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(ROOF.glob("*__*__*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 3:
+            continue
+        a, s, tag = parts
+        r = load(p)
+        if r is None or r["status"] != "ok":
+            continue
+        base = load(ROOF / f"{a}__{s}.json")
+        gain = (
+            r["roofline_fraction"] / base["roofline_fraction"]
+            if base and base.get("roofline_fraction")
+            else float("nan")
+        )
+        rows.append(
+            f"| {a} x {s} | {tag} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {r['roofline_fraction']:.4f} | x{gain:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def bench_tables() -> str:
+    out = []
+    for name in sorted(BENCH.glob("*.json")):
+        data = load(name)
+        out.append(f"### {name.stem}\n")
+        rows = data["rows"] if isinstance(data, dict) and "rows" in data else data
+        if isinstance(rows, list) and rows and isinstance(rows[0], dict):
+            keys = []
+            for r in rows:  # union of scalar keys, first-seen order
+                for k, v in r.items():
+                    if not isinstance(v, (list, dict)) and k not in keys:
+                        keys.append(k)
+            out.append("| " + " | ".join(keys) + " |")
+            out.append("|" + "---|" * len(keys))
+            for r in rows:
+                cells = []
+                for k in keys:
+                    v = r.get(k, "")
+                    cells.append(f"{v:.4g}" if isinstance(v, float) else str(v))
+                out.append("| " + " | ".join(cells) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    parts = [
+        "## Generated: §Dry-run (single-pod, 16x16 = 256 chips)\n",
+        dryrun_table("single"),
+        "\n## Generated: §Dry-run (multi-pod, 2x16x16 = 512 chips)\n",
+        dryrun_table("multi"),
+        "\n## Generated: §Roofline (single-pod baseline, scan-corrected)\n",
+        roofline_table(),
+        "\n## Generated: §Perf hillclimb variants\n",
+        perf_variants_table(),
+        "\n## Generated: benchmark rows\n",
+        bench_tables(),
+    ]
+    OUT.write_text("\n".join(parts))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Dev smoke for the three baselines on a small cluster."""
+import time
+
+from repro.core import LaminarConfig
+from repro.core.baselines import RUNNERS
+
+cfg = LaminarConfig(
+    num_nodes=256,
+    zone_size=64,
+    probe_capacity=4096,
+    max_arrivals_per_tick=256,
+    horizon_ms=500.0,
+    rho=0.8,
+)
+for name, run in RUNNERS.items():
+    t0 = time.time()
+    out = run(cfg, seed=0, capacity=1 << 15)
+    dt = time.time() - t0
+    print(
+        f"{name:>6}: arrived={out['arrived']} started={out['started']} "
+        f"success={out['start_success_raw']:.3f} p50={out['p50_ms']:.2f}ms "
+        f"p99={out['p99_ms']:.1f}ms lam={out['lambda_per_s']:.0f}/s wall={dt:.1f}s"
+    )

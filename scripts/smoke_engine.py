@@ -1,0 +1,37 @@
+"""Quick dev smoke: tiny Laminar run, prints the summary."""
+import time
+
+from repro.core import LaminarConfig, LaminarEngine
+
+cfg = LaminarConfig(
+    num_nodes=128,
+    zone_size=32,
+    probe_capacity=2048,
+    max_arrivals_per_tick=128,
+    horizon_ms=500.0,
+    rho=0.8,
+)
+eng = LaminarEngine(cfg)
+t0 = time.time()
+out = eng.run(seed=0)
+t1 = time.time()
+out2 = eng.run(seed=1)
+t2 = time.time()
+print(f"first run (incl compile): {t1 - t0:.1f}s; second run: {t2 - t1:.1f}s")
+for k in (
+    "arrived",
+    "started",
+    "completed",
+    "fastfail",
+    "lost",
+    "timeout",
+    "reserve_expired",
+    "infeasible_winner",
+    "start_success_ratio",
+    "p50_ms",
+    "p99_ms",
+    "control_us_per_start",
+    "lambda_per_s",
+):
+    print(f"{k:>24}: {out[k]}")
+print(f"wall: {t1 - t0:.1f}s")

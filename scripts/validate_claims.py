@@ -1,0 +1,150 @@
+"""Validate the paper's claims against measured benchmark rows.
+
+Reads results/bench/*.json and prints a verdict per claim (the §Claims table
+in EXPERIMENTS.md). Exit code 0 iff every claim that could be evaluated holds
+qualitatively.
+"""
+
+import json
+import math
+from pathlib import Path
+
+BENCH = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def load(name):
+    p = BENCH / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def main():
+    verdicts = []
+
+    exp1 = load("exp1_mixed_load")
+    if exp1:
+        lam = {r["rho"]: r for r in exp1 if r["paradigm"] == "laminar"}
+        slurm = {r["rho"]: r for r in exp1 if r["paradigm"] == "slurm"}
+        ray = {r["rho"]: r for r in exp1 if r["paradigm"] == "ray"}
+        flux = {r["rho"]: r for r in exp1 if r["paradigm"] == "flux"}
+        verdicts.append(
+            ("1. Laminar success high through rho=0.8",
+             lam[0.8]["success"] >= 0.97,
+             f"measured {lam[0.8]['success']:.4f} (paper 0.9999)")
+        )
+        verdicts.append(
+            ("2. Laminar p99 grows gently 0.4->0.9",
+             lam[0.9]["p99_ms"] < 20 * max(lam[0.4]["p99_ms"], 1e-9)
+             and lam[0.9]["p99_ms"] < 500,
+             f"{lam[0.4]['p99_ms']:.1f} -> {lam[0.9]['p99_ms']:.1f} ms "
+             f"(paper 3.3 -> 27.8 ms)")
+        )
+        exp1b = load("exp1b_scale_contrast")
+        if exp1b:
+            sl = next(r for r in exp1b if r["paradigm"] == "slurm")
+            la = next(r for r in exp1b if r["paradigm"] == "laminar")
+            verdicts.append(
+                ("3. Slurm-like saturated/coordination-bound at scale",
+                 sl["success_total"] < 0.5 and la["success_total"] > 0.9,
+                 f"@{sl['nodes']} nodes rho=0.8: slurm {sl['success_total']:.3f} "
+                 f"vs laminar {la['success_total']:.3f}")
+            )
+        else:
+            verdicts.append(
+                ("3. Slurm-like coordination-bound (p99 blow-up) at high rho",
+                 slurm[0.8]["p99_ms"] > 2 * lam[0.8]["p99_ms"],
+                 f"slurm p99 {slurm[0.8]['p99_ms']:.0f} ms vs laminar "
+                 f"{lam[0.8]['p99_ms']:.0f} ms")
+            )
+        ray_growth = ray[0.9]["p99_ms"] / max(ray[0.4]["p99_ms"], 1e-9)
+        flux_growth = flux[0.9]["p99_ms"] / max(flux[0.4]["p99_ms"], 1e-9)
+        verdicts.append(
+            ("4. Flux/Ray tails inflate mechanically with rho (retry/rollback"
+             " amplification; full collapse at --full geometry)",
+             ray_growth > 20 and flux_growth > 3,
+             f"ray p99 x{ray_growth:.0f}, flux p99 x{flux_growth:.1f} "
+             f"(laminar stays >= {min(lam[r]['success'] for r in (0.8, 0.9)):.3f} success)")
+        )
+
+    exp2 = load("exp2_scaleout")
+    if exp2:
+        p99s = [r["p99_ms"] for r in exp2]
+        succ = [r["success"] for r in exp2]
+        # the claim is "scale does NOT degrade the hot path": p99 must not
+        # grow with node count (paper: it marginally improves; here the
+        # loss-regen tail drops below the 1% quantile as zones multiply)
+        verdicts.append(
+            ("5. scale-out does not degrade p99/success",
+             p99s[-1] <= 1.5 * p99s[0] and succ[-1] >= succ[0] - 0.01
+             and min(succ) > 0.95,
+             f"p99 {p99s[0]:.1f} -> {p99s[-1]:.1f} ms over "
+             f"{exp2[0]['nodes']}->{exp2[-1]['nodes']} nodes, "
+             f"success >= {min(succ):.4f}")
+        )
+
+    cw = load("control_work")
+    if cw:
+        loads = [r["control_us"] for r in cw if r["sweep"] == "load"]
+        scales = [r["control_us"] for r in cw if r["sweep"] == "scale"]
+        verdicts.append(
+            ("6. control work per success ~O(1)",
+             max(loads) < 1.0 and max(scales) / max(min(scales), 1e-9) < 3.0,
+             f"load sweep {loads[0]:.3f}->{loads[-1]:.3f} us; "
+             f"scale sweep {min(scales):.3f}-{max(scales):.3f} us "
+             f"(paper 0.048-0.095 us)")
+        )
+
+    exp3 = load("exp3_staleness")
+    if exp3:
+        succ = [r["success"] for r in exp3]
+        p99 = [r["p99_ms"] for r in exp3]
+        verdicts.append(
+            ("7. staleness 0-100 ms absorbed",
+             max(succ) - min(succ) < 0.03 and max(p99) / max(min(p99), 1e-9) < 2.0,
+             f"success {min(succ):.4f}-{max(succ):.4f}, p99 {min(p99):.1f}-{max(p99):.1f} ms")
+        )
+
+    exp4 = load("exp4_ablations")
+    if exp4:
+        tp = [r for r in exp4 if r["ablation"] == "two_phase"]
+        on = {r["squatter_ratio"]: r["success"] for r in tp if r["enabled"]}
+        off = {r["squatter_ratio"]: r["success"] for r in tp if not r["enabled"]}
+        verdicts.append(
+            ("8. two-phase reservation recovers squatters",
+             all(on[k] > off[k] for k in on),
+             "; ".join(f"squat={k}: {off[k]:.3f}->{on[k]:.3f}" for k in sorted(on)))
+        )
+        rg = [r for r in exp4 if r["ablation"] == "regeneration"]
+        ron = {r["loss"]: r["success"] for r in rg if r["enabled"]}
+        roff = {r["loss"]: r["success"] for r in rg if not r["enabled"]}
+        verdicts.append(
+            ("9. DA regeneration recovers probe loss",
+             all(ron[k] > roff[k] for k in ron),
+             "; ".join(f"loss={k}: {roff[k]:.3f}->{ron[k]:.3f}" for k in sorted(ron)))
+        )
+
+    exp5 = load("exp5_airlock")
+    if exp5:
+        rows = exp5["rows"] if isinstance(exp5, dict) else exp5
+        off = next(r for r in rows if not r["airlock"])
+        on = next(r for r in rows if r["airlock"])
+        verdicts.append(
+            ("10. Airlock: L-task OOM kills -> 0, survival up, bounded dissipation",
+             on["oom_kill_l"] == 0
+             and off["oom_kill_l"] > 0
+             and on["exec_survival"] > off["exec_survival"],
+             f"kills {off['oom_kill_l']}->{on['oom_kill_l']}, survival "
+             f"{off['exec_survival']:.4f}->{on['exec_survival']:.4f}, "
+             f"drops {off['probe_drops']}->{on['probe_drops']}")
+        )
+
+    ok = True
+    for name, passed, detail in verdicts:
+        mark = "REPRODUCED" if passed else "DIVERGES"
+        ok &= passed
+        print(f"[{mark:>10}] {name} — {detail}")
+    print(f"\n{sum(p for _, p, _ in verdicts)}/{len(verdicts)} claims reproduced")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

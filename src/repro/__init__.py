@@ -1,0 +1,14 @@
+"""repro: Laminar — probe-first scheduling with deterministic runtime
+survival, as a production-grade JAX framework.
+
+Layers:
+  repro.core      — the paper's scheduler (TEG / Z-HAF / DA / Arbiter / Airlock)
+  repro.kernels   — Pallas TPU kernels for the control-plane hot path
+  repro.models    — the 10 assigned architectures (dense/MoE/hybrid/SSM/audio/VLM)
+  repro.sched     — Laminar-as-a-feature: serving admission + MoE routing
+  repro.train     — optimizer, data, checkpointing, fault tolerance
+  repro.parallel  — sharding rules (DP/TP/EP/SP over pod x data x model)
+  repro.launch    — production meshes, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""Laminar core: probe-first, execute-later scheduling with runtime survival.
+
+The paper's primary contribution, implemented as a fully-vectorized,
+tick-synchronous JAX system:
+
+  * :mod:`repro.core.teg`      — Thermo-Economic Gateway (probabilistic flow splitting)
+  * :mod:`repro.core.zhaf`     — Zone Holographic Availability Field (projected state)
+  * :mod:`repro.core.da`       — Decentralized Agent lifecycle (kinetic addressing)
+  * :mod:`repro.core.arbiter`  — node-local arbitration + two-phase reservation
+  * :mod:`repro.core.airlock`  — bounded runtime survival (suspension ladder)
+  * :mod:`repro.core.engine`   — `lax.scan` composition of everything
+  * :mod:`repro.core.baselines`— Slurm-like / Ray-like / Flux-like cost models
+"""
+
+from repro.core.config import (
+    BaselineConfig,
+    LaminarConfig,
+    MemoryConfig,
+    WorkloadConfig,
+)
+from repro.core.engine import LaminarEngine
+
+__all__ = [
+    "BaselineConfig",
+    "LaminarConfig",
+    "MemoryConfig",
+    "WorkloadConfig",
+    "LaminarEngine",
+]

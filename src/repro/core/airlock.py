@@ -1,0 +1,203 @@
+"""Airlock: bounded node-local runtime survival (§III-G/H/I, Exp5).
+
+Converts severe physical memory pressure into an ordered policy instead of
+blind kernel OOM destruction:
+
+  pressure > high watermark  ->  reverse-recursive suspension in *ascending*
+                                 E_v order (lowest declared value first)
+  pressure < safe watermark  ->  in-situ resume (before T_susp)
+  suspension beyond T_susp   ->  resident DA secondary reactivation (fresh
+                                 patience, shared survival TTL T_surv)
+  T_surv expiry              ->  bounded reclamation of task + DA
+
+With Airlock disabled the model reproduces kernel-OOM behavior: above the kill
+watermark the largest-memory resident is destroyed outright (the linux badness
+heuristic), which is precisely what indiscriminately kills L-tasks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LaminarConfig
+from repro.core.state import EMPTY, RUNNING, SUSPENDED, SimState
+from repro.core.arbiter import _free_atoms_at
+
+
+def _resident_mask(s: SimState) -> jax.Array:
+    return s.st == RUNNING
+
+
+def _suspended_mask(s: SimState) -> jax.Array:
+    return s.st == SUSPENDED
+
+
+def node_pressure(cfg: LaminarConfig, s: SimState) -> jax.Array:
+    """Physical memory watermark per node (fraction of capacity)."""
+    mem = jnp.where(
+        _resident_mask(s),
+        s.mem,
+        jnp.where(
+            _suspended_mask(s) | (s.migrating & (s.alloc_node >= 0)),
+            s.mem * cfg.memory.suspended_residual,
+            0.0,
+        ),
+    )
+    tgt = jnp.where(s.alloc_node >= 0, s.alloc_node, cfg.num_nodes)
+    res = jnp.zeros((cfg.num_nodes + 1,), jnp.float32).at[tgt].add(mem)
+    return s.rigid_mem + res[:-1] + s.amb
+
+
+def memory_dynamics(cfg: LaminarConfig, s: SimState, key: jax.Array) -> SimState:
+    """Exp5 dynamic perturbation: AR(1) ambient noise + Bernoulli bursts +
+    slow per-node drift (neighboring rigid workloads breathing)."""
+    mc = cfg.memory
+    if not mc.enabled:
+        return s
+    k_n, k_b, k_bs = jax.random.split(key, 3)
+    N = cfg.num_nodes
+    decay = mc.ambient_decay
+    noise = jnp.sqrt(1 - decay**2) * mc.noise_sigma * jax.random.normal(k_n, (N,))
+    burst = (
+        (jax.random.uniform(k_b, (N,)) < mc.burst_rate)
+        * jax.random.uniform(k_bs, (N,))
+        * mc.burst_scale
+    )
+    phase = jnp.arange(N, dtype=jnp.float32) * 2.399  # golden-angle spread
+    tsec = s.t.astype(jnp.float32) * cfg.dt_ms / 1e3
+    drift = mc.drift_kappa * 0.5 * (1.0 + jnp.sin(2 * jnp.pi * tsec + phase))
+    amb = jnp.clip(decay * (s.amb - drift) + noise + burst + drift, 0.0, 0.8)
+    return s._replace(amb=amb)
+
+
+def _per_node_extreme(
+    cfg: LaminarConfig, s: SimState, candidate: jax.Array, score: jax.Array
+):
+    """Pick, per node, the candidate probe with the max ``score`` (use negated
+    score for min). Returns victim mask (one probe per node at most)."""
+    P = s.st.shape[0]
+    N = cfg.num_nodes
+    slot = jnp.arange(P, dtype=jnp.float32)
+    uscore = jnp.where(candidate, score * 1e4 + slot * 1e-3, -jnp.inf)
+    tgt = jnp.where(candidate, s.alloc_node, N)
+    best = jnp.full((N + 1,), -jnp.inf, jnp.float32).at[tgt].max(uscore)
+    return candidate & (uscore == best[jnp.clip(s.alloc_node, 0, N)]) & jnp.isfinite(
+        uscore
+    )
+
+
+def runtime_control(
+    cfg: LaminarConfig, s: SimState, pressure: jax.Array
+) -> SimState:
+    """Per-node survival action under acute pressure (one action/node/tick)."""
+    mc = cfg.memory
+    if not mc.enabled:
+        return s
+
+    if not cfg.airlock:
+        # kernel OOM: above kill watermark, destroy the largest resident
+        # (badness ~ memory footprint) -- indiscriminate, kills L-tasks.
+        over = pressure > mc.kill_watermark
+        cand = _resident_mask(s) & over[jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)] & (
+            s.alloc_node >= 0
+        )
+        victim = _per_node_extreme(cfg, s, cand, s.mem)
+        free = _free_atoms_at(s.free, s.alloc, s.alloc_node, victim)
+        m = s.metrics
+        m = m._replace(
+            oom_kill_f=m.oom_kill_f + jnp.sum((victim & ~s.contig).astype(jnp.int32)),
+            oom_kill_l=m.oom_kill_l + jnp.sum((victim & s.contig).astype(jnp.int32)),
+        )
+        return s._replace(
+            st=jnp.where(victim, EMPTY, s.st),
+            free=free,
+            alloc=jnp.where(victim[:, None], jnp.uint32(0), s.alloc),
+            alloc_node=jnp.where(victim, -1, s.alloc_node),
+            mem=jnp.where(victim, 0.0, s.mem),
+            metrics=m,
+        )
+
+    # Airlock: reverse-recursive suspension, ascending E_v (lowest value first)
+    over = pressure > mc.high_watermark
+    cand = _resident_mask(s) & over[jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)] & (
+        s.alloc_node >= 0
+    )
+    victim = _per_node_extreme(cfg, s, cand, -s.ev)
+    m = s.metrics
+    m = m._replace(
+        suspended_cnt=m.suspended_cnt + jnp.sum(victim.astype(jnp.int32))
+    )
+    return s._replace(
+        st=jnp.where(victim, SUSPENDED, s.st),
+        susp_tick=jnp.where(victim, s.t, s.susp_tick),
+        migrating=jnp.where(victim, False, s.migrating),
+        metrics=m,
+    )
+
+
+def airlock_transitions(
+    cfg: LaminarConfig, s: SimState, pressure: jax.Array
+) -> Tuple[SimState, jax.Array]:
+    """In-situ resume / threshold-triggered reactivation / survival expiry.
+
+    Returns (state, reactivation_dispatch_mask) -- reactivated DAs re-enter the
+    network through TEG exactly like fresh probes (§III-D).
+    """
+    if not (cfg.memory.enabled and cfg.airlock):
+        return s, jnp.zeros_like(s.migrating)
+
+    susp = _suspended_mask(s)
+    node_ok = pressure < cfg.memory.safe_watermark
+    at_node = jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)
+
+    # 1) in-situ recovery before threshold (only if no reactivation yet)
+    resume = susp & ~s.migrating & node_ok[at_node] & (s.alloc_node >= 0)
+
+    # 2) threshold-triggered secondary reactivation
+    age = s.t - s.susp_tick
+    react = (
+        susp
+        & ~s.migrating
+        & ~resume
+        & (age > cfg.ticks(cfg.t_susp_ms))
+    )
+
+    st = jnp.where(resume, RUNNING, s.st)
+    migrating = jnp.where(react, True, s.migrating)
+    patience = jnp.where(react, s.ev, s.patience)  # fresh E_patience budget
+    surv_deadline = jnp.where(react, s.t + cfg.ticks(cfg.t_surv_ms), s.surv_deadline)
+
+    # 3) shared survival TTL expiry: bounded reclamation of task + DA.
+    # Applies to ANY migrating incarnation (probing, queued, reserved at a
+    # destination, or back in glass-state after a failed attempt).
+    expire = (s.migrating | migrating) & (s.t > jnp.where(react, surv_deadline, s.surv_deadline)) & (
+        s.st != EMPTY
+    ) & (s.st != RUNNING)
+    free = _free_atoms_at(s.free, s.alloc, s.alloc_node, expire)
+    free = _free_atoms_at(free, s.alloc2, s.node2, expire & (s.node2 >= 0))
+
+    st = jnp.where(expire, EMPTY, st)
+
+    m = s.metrics
+    m = m._replace(
+        resumed_insitu=m.resumed_insitu + jnp.sum(resume.astype(jnp.int32)),
+        reactivated=m.reactivated + jnp.sum(react.astype(jnp.int32)),
+        reclaimed=m.reclaimed + jnp.sum(expire.astype(jnp.int32)),
+    )
+    s = s._replace(
+        st=st,
+        migrating=jnp.where(expire, False, migrating),
+        patience=patience,
+        surv_deadline=surv_deadline,
+        free=free,
+        alloc=jnp.where(expire[:, None], jnp.uint32(0), s.alloc),
+        alloc_node=jnp.where(expire, -1, s.alloc_node),
+        alloc2=jnp.where(expire[:, None], jnp.uint32(0), s.alloc2),
+        node2=jnp.where(expire, -1, s.node2),
+        metrics=m,
+    )
+    dispatch = react & ~expire
+    return s, dispatch

@@ -1,0 +1,11 @@
+"""Optimistic architectural cost models of the three competing paradigms."""
+
+from repro.core.baselines import flux_like, ray_like, slurm_like
+
+RUNNERS = {
+    "slurm": slurm_like.run,
+    "ray": ray_like.run,
+    "flux": flux_like.run,
+}
+
+__all__ = ["slurm_like", "ray_like", "flux_like", "RUNNERS"]

@@ -1,0 +1,244 @@
+"""Shared substrate for the three optimistic baseline models (§V-A).
+
+All baselines share Laminar's cluster geometry, rigid pre-occupancy, bitmap
+allocation machinery, open-loop workload, network ground rules (0.5 ms hop,
+10 ms heartbeat) and metrics — only the control path differs. Engineering
+inefficiencies of the real systems (etcd fsync, TCP retransmit, GCS
+serialization) are deliberately *omitted*: each model is optimistic in favor
+of the baseline, so any gap favoring Laminar is a lower bound.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap, workload
+from repro.core.config import BaselineConfig, LaminarConfig
+from repro.core.state import (
+    HIST_BUCKETS,
+    bucket_upper_ms,
+    init_state,
+    latency_bucket,
+)
+
+# task states shared by the baseline models
+B_EMPTY = 0
+B_QUEUED = 1  # waiting in whichever queue the paradigm uses
+B_MOVING = 2  # in-flight redirect / dispatch / rollback hop
+B_RUNNING = 3
+B_BACKOFF = 4  # retry backoff / rollback backoff
+
+
+class BaseMetrics(NamedTuple):
+    arrived: jax.Array
+    started: jax.Array
+    completed: jax.Array
+    failed: jax.Array
+    dropped: jax.Array
+    timeout: jax.Array
+    retries: jax.Array
+    spillbacks: jax.Array
+    rollbacks: jax.Array
+    lat_hist: jax.Array
+
+    @staticmethod
+    def zeros() -> "BaseMetrics":
+        z = jnp.zeros((), jnp.int32)
+        return BaseMetrics(*([z] * 9), jnp.zeros((HIST_BUCKETS,), jnp.int32))
+
+
+class TaskTable(NamedTuple):
+    st: jax.Array
+    contig: jax.Array
+    mass: jax.Array
+    node: jax.Array
+    shard: jax.Array
+    timer: jax.Array
+    retries: jax.Array
+    arrival: jax.Array
+    service: jax.Array
+    alloc: jax.Array  # (P, W)
+    alloc_node: jax.Array
+
+    @staticmethod
+    def empty(P: int, W: int) -> "TaskTable":
+        zi = jnp.zeros((P,), jnp.int32)
+        return TaskTable(
+            st=zi,
+            contig=jnp.zeros((P,), jnp.bool_),
+            mass=zi,
+            node=jnp.full((P,), -1, jnp.int32),
+            shard=zi,
+            timer=zi,
+            retries=zi,
+            arrival=zi,
+            service=zi,
+            alloc=jnp.zeros((P, W), jnp.uint32),
+            alloc_node=jnp.full((P,), -1, jnp.int32),
+        )
+
+
+def init_cluster(cfg: LaminarConfig, seed: int):
+    """Reuse Laminar's painted post-landing cluster; return (free_words, lam)."""
+    s = init_state(cfg, seed)
+    free = s.free
+    lam = workload.lambda_per_tick(cfg, float(np.asarray(s.rep_S).sum()))
+    return free, lam
+
+
+def inject(
+    cfg: LaminarConfig,
+    tt: TaskTable,
+    m: BaseMetrics,
+    key: jax.Array,
+    lam: float,
+    t: jax.Array,
+) -> Tuple[TaskTable, BaseMetrics, jax.Array]:
+    """Write the tick's Poisson arrivals into free slots; returns new-task mask."""
+    batch = workload.sample_arrivals(cfg, key, lam)
+    n_max = cfg.max_arrivals_per_tick
+    want = jnp.arange(n_max) < batch.n
+    slots = jnp.nonzero(tt.st == B_EMPTY, size=n_max, fill_value=-1)[0]
+    ok = want & (slots >= 0)
+    slot = jnp.maximum(slots, 0)
+    # scatters drop invalid rows (clamping to 0 could clobber slot 0)
+    tgt_s = jnp.where(ok, slot, tt.st.shape[0])
+
+    def put(arr, val):
+        return arr.at[tgt_s].set(val, mode="drop")
+
+    tt = tt._replace(
+        st=put(tt.st, jnp.full((n_max,), B_QUEUED, jnp.int32)),
+        contig=put(tt.contig, batch.contig),
+        mass=put(tt.mass, batch.mass),
+        node=put(tt.node, jnp.full((n_max,), -1, jnp.int32)),
+        timer=put(tt.timer, jnp.zeros((n_max,), jnp.int32)),
+        retries=put(tt.retries, jnp.zeros((n_max,), jnp.int32)),
+        arrival=put(tt.arrival, jnp.full((n_max,), 1, jnp.int32) * t),
+        service=put(tt.service, batch.service),
+        alloc=tt.alloc.at[tgt_s].set(jnp.uint32(0), mode="drop"),
+        alloc_node=put(tt.alloc_node, jnp.full((n_max,), -1, jnp.int32)),
+    )
+    mask = jnp.zeros_like(tt.st, jnp.bool_).at[tgt_s].set(True, mode="drop")
+    m = m._replace(
+        arrived=m.arrived + jnp.sum(ok.astype(jnp.int32)),
+        dropped=m.dropped + (batch.n - jnp.sum(ok.astype(jnp.int32))),
+    )
+    return tt, m, mask
+
+
+def admit_fifo(
+    cfg: LaminarConfig,
+    tt: TaskTable,
+    free: jax.Array,
+    cand: jax.Array,
+    t: jax.Array,
+    hist: jax.Array,
+):
+    """Admit at most one candidate per node (earliest arrival wins), against
+    the true bitmap. Returns (tt, free, admit_mask, reject_mask, n_started, hist).
+    """
+    P = tt.st.shape[0]
+    N = cfg.num_nodes
+    node_c = jnp.clip(tt.node, 0, N - 1)
+    slot = jnp.arange(P, dtype=jnp.int32)
+
+    score = jnp.where(cand, -(tt.arrival.astype(jnp.float32)) * 1e3 - slot.astype(jnp.float32) * 1e-3, -jnp.inf)
+    tgt = jnp.where(cand, tt.node, N)
+    best = jnp.full((N + 1,), -jnp.inf, jnp.float32).at[tgt].max(score)
+    winner = cand & (score == best[jnp.clip(tt.node, 0, N)]) & jnp.isfinite(score)
+
+    wslot = jnp.full((N + 1,), -1, jnp.int32).at[
+        jnp.where(winner, tt.node, N)
+    ].max(jnp.where(winner, slot, -1))
+    has_w = wslot[:N] >= 0
+    ws = jnp.clip(wslot[:N], 0, P - 1)
+
+    bits = bitmap.unpack_bits(free, cfg.atoms_per_node)
+    alloc_bits, feas_n = bitmap.alloc_for_class(
+        bits, tt.mass[ws], tt.contig[ws], policy=cfg.alloc_policy
+    )
+    feas_n = feas_n & has_w
+    taken = alloc_bits & feas_n[:, None]
+    alloc_words_n = bitmap.pack_bits(taken)
+    free = free & ~alloc_words_n
+
+    admit = winner & feas_n[node_c]
+    reject = winner & ~admit
+
+    probe_alloc = alloc_words_n[node_c]
+    tt = tt._replace(
+        st=jnp.where(admit, B_RUNNING, tt.st),
+        alloc=jnp.where(admit[:, None], probe_alloc, tt.alloc),
+        alloc_node=jnp.where(admit, tt.node, tt.alloc_node),
+    )
+    lat_ms = (t - tt.arrival).astype(jnp.float32) * cfg.dt_ms
+    b = latency_bucket(lat_ms)
+    hist = hist.at[jnp.where(admit, b, 0)].add(admit.astype(jnp.int32))
+    return tt, free, admit, reject, jnp.sum(admit.astype(jnp.int32)), hist
+
+
+def complete(cfg: LaminarConfig, tt: TaskTable, free: jax.Array, m: BaseMetrics):
+    running = tt.st == B_RUNNING
+    service = jnp.where(running, tt.service - 1, tt.service)
+    done = running & (service <= 0)
+    upd = jnp.where(done[:, None], tt.alloc, jnp.uint32(0))
+    tgt = jnp.where(done, tt.alloc_node, cfg.num_nodes)
+    acc = jnp.zeros((cfg.num_nodes + 1, free.shape[1]), jnp.uint32).at[tgt].add(upd)
+    free = free | acc[:-1]
+    m = m._replace(completed=m.completed + jnp.sum(done.astype(jnp.int32)))
+    tt = tt._replace(
+        st=jnp.where(done, B_EMPTY, tt.st),
+        service=service,
+        alloc=jnp.where(done[:, None], jnp.uint32(0), tt.alloc),
+        alloc_node=jnp.where(done, -1, tt.alloc_node),
+    )
+    return tt, free, m
+
+
+def expire(
+    cfg: LaminarConfig,
+    bcfg: BaselineConfig,
+    tt: TaskTable,
+    m: BaseMetrics,
+    t: jax.Array,
+    use_timeout: bool = True,
+):
+    if not use_timeout:
+        return tt, m
+    waiting = (tt.st != B_EMPTY) & (tt.st != B_RUNNING)
+    late = waiting & ((t - tt.arrival) > cfg.ticks(bcfg.task_timeout_ms))
+    m = m._replace(timeout=m.timeout + jnp.sum(late.astype(jnp.int32)))
+    return tt._replace(st=jnp.where(late, B_EMPTY, tt.st)), m
+
+
+def summarize_baseline(cfg: LaminarConfig, m: BaseMetrics, tt: TaskTable):
+    mm = jax.tree.map(np.asarray, m)
+    arrived = max(int(mm.arrived), 1)
+    st = np.asarray(tt.st)
+    in_flight = int(((st != B_EMPTY) & (st != B_RUNNING)).sum())
+    hist = np.asarray(mm.lat_hist, np.float64)
+    total = hist.sum()
+    if total > 0:
+        c = np.cumsum(hist) / total
+        uppers = bucket_upper_ms(np.arange(HIST_BUCKETS))
+        p50 = float(uppers[int(np.searchsorted(c, 0.50))])
+        p99 = float(uppers[int(np.searchsorted(c, 0.99))])
+    else:
+        p50 = p99 = float("nan")
+    return {
+        **{f: int(getattr(mm, f)) for f in BaseMetrics._fields if f != "lat_hist"},
+        "in_flight_end": in_flight,
+        "start_success_ratio": int(mm.started) / max(arrived - in_flight, 1),
+        "start_success_raw": int(mm.started) / arrived,
+        # offered-load success: queue-capacity drops count against the
+        # scheduler ("infinite queuing disabled" -- saturation must show)
+        "start_success_total": int(mm.started)
+        / max(arrived + int(mm.dropped), 1),
+        "p50_ms": p50,
+        "p99_ms": p99,
+    }

@@ -1,0 +1,172 @@
+"""Flux-like: the structure-bound bottleneck (§V-A).
+
+A hierarchical broker tree (fanout 16, leaf groups of 32 nodes). Graph
+matching cost is removed (optimistic: 1 us/level dispatch, 5 ns leaf scan),
+but three topology-level laws are enforced:
+
+  1. root choke point: every dispatch and every re-dispatch passes the root;
+     beyond 4,000 concurrent tasks an exponential congestion penalty applies;
+  2. isolated ledgers: sibling brokers decide from views refreshed only by the
+     10 ms heartbeat -> concurrent placements collide at the leaves;
+  3. cascading rollback: a leaf collision cannot resolve laterally; the task
+     climbs back toward the root at 0.5 ms/hop + 10 ms backoff per level.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap
+from repro.core.baselines import common as C
+from repro.core.config import BaselineConfig, LaminarConfig
+
+ROOT_BATCH = 256
+
+
+class FluxState(NamedTuple):
+    tt: C.TaskTable
+    free: jax.Array
+    stale_leaf_S: jax.Array  # heartbeat view of per-leaf aggregate slack
+    carry: jax.Array
+    t: jax.Array
+    key: jax.Array
+    metrics: C.BaseMetrics
+
+
+def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
+    N = cfg.num_nodes
+    group = 32  # nodes per leaf broker
+    n_leaves = max(1, N // group)
+    levels = max(1, math.ceil(math.log(max(n_leaves, 2), bcfg.flux_fanout)))
+    hb = cfg.ticks(bcfg.heartbeat_ms)
+
+    def step(s: FluxState, _):
+        key, k_arr, k_leaf, k_node = jax.random.split(s.key, 4)
+        s = s._replace(key=key)
+        tt, free, m = s.tt, s.free, s.metrics
+
+        tt, free, m = C.complete(cfg, tt, free, m)
+        tt, m, new = C.inject(cfg, tt, m, k_arr, lam, s.t)
+        # new arrivals wait at the root (shard == -1 marks "awaiting dispatch")
+        tt = tt._replace(shard=jnp.where(new, -1, tt.shard))
+
+        # rollback / dispatch hops in flight
+        moving = (tt.st == C.B_MOVING) | (tt.st == C.B_BACKOFF)
+        timer = jnp.where(moving, tt.timer - 1, tt.timer)
+        done_move = (tt.st == C.B_MOVING) & (timer <= 0)
+        done_back = (tt.st == C.B_BACKOFF) & (timer <= 0)  # back at root level
+        tt = tt._replace(
+            st=jnp.where(done_move | done_back, C.B_QUEUED, tt.st),
+            shard=jnp.where(done_back, -1, tt.shard),
+            timer=timer,
+        )
+
+        # --- root dispatch under the choke ------------------------------------
+        in_system = jnp.sum(
+            ((tt.st != C.B_EMPTY) & (tt.st != C.B_RUNNING)).astype(jnp.int32)
+        ).astype(jnp.float32)
+        base_rate = (cfg.dt_ms * 1e3) / (
+            levels * bcfg.flux_dispatch_us_per_level
+        )
+        choke = jnp.exp(
+            -jnp.maximum(0.0, in_system - bcfg.flux_root_choke)
+            / bcfg.flux_root_choke_scale
+        )
+        carry = s.carry + base_rate * choke
+        budget = jnp.minimum(jnp.floor(carry), ROOT_BATCH).astype(jnp.int32)
+        carry = carry - budget.astype(jnp.float32)
+
+        at_root = (tt.st == C.B_QUEUED) & (tt.shard == -1)
+        age = jnp.where(at_root, -tt.arrival, jnp.int32(-(1 << 30)))
+        _, idx = jax.lax.top_k(age, ROOT_BATCH)
+        take = jnp.arange(ROOT_BATCH) < budget
+        sel = jnp.zeros_like(at_root).at[
+            jnp.where(take, idx, tt.st.shape[0])
+        ].set(True, mode="drop")
+        sel = sel & at_root
+
+        # pick a leaf from the heartbeat-stale per-leaf slack (gumbel-softmax)
+        logits = jnp.log1p(jnp.maximum(s.stale_leaf_S, 0.0))
+        g = jax.random.gumbel(k_leaf, (tt.st.shape[0], n_leaves))
+        leaf = jnp.argmax(logits[None, :] + g, axis=-1).astype(jnp.int32)
+        # node within leaf group chosen by the leaf broker (uniform; its own
+        # 32-node ledger is scanned at 5 ns -- cost negligible)
+        off = jax.random.randint(k_node, tt.st.shape, 0, group)
+        node = jnp.clip(leaf * group + off, 0, N - 1)
+        tt = tt._replace(
+            shard=jnp.where(sel, leaf, tt.shard),
+            node=jnp.where(sel, node, tt.node),
+            st=jnp.where(sel, C.B_MOVING, tt.st),
+            timer=jnp.where(sel, 1, tt.timer),  # one hop down
+        )
+
+        # --- leaf arbitration: collisions roll back up the tree ----------------
+        at_leaf = (tt.st == C.B_QUEUED) & (tt.shard >= 0)
+        tt, free, admit, reject, n_started, hist = C.admit_fifo(
+            cfg, tt, free, at_leaf, s.t, m.lat_hist
+        )
+        climb = jnp.minimum(tt.retries + 1, levels).astype(jnp.float32)
+        rb_ms = climb * (bcfg.flux_rollback_hop_ms + bcfg.flux_backoff_ms_per_level)
+        tt = tt._replace(
+            st=jnp.where(reject, C.B_BACKOFF, tt.st),
+            timer=jnp.where(
+                reject,
+                jnp.maximum(1, jnp.round(rb_ms / cfg.dt_ms).astype(jnp.int32)),
+                tt.timer,
+            ),
+            retries=jnp.where(reject, tt.retries + 1, tt.retries),
+        )
+        m = m._replace(
+            started=m.started + n_started,
+            rollbacks=m.rollbacks + jnp.sum(reject.astype(jnp.int32)),
+            lat_hist=hist,
+        )
+
+        # --- heartbeat refresh of leaf aggregate slack --------------------------
+        bits = bitmap.unpack_bits(free, cfg.atoms_per_node)
+        true_S = jnp.sum(bits, axis=-1).astype(jnp.float32)
+        leaf_S = true_S[: n_leaves * group].reshape(n_leaves, group).sum(axis=-1)
+        stale_leaf_S = jnp.where((s.t % hb) == 0, leaf_S, s.stale_leaf_S)
+
+        tt, m = C.expire(cfg, bcfg, tt, m, s.t)
+        s = FluxState(tt, free, stale_leaf_S, carry, s.t + 1, s.key, m)
+        return s, jnp.stack([m.arrived, m.started, m.completed])
+
+    return step
+
+
+def run(
+    cfg: LaminarConfig,
+    bcfg: BaselineConfig | None = None,
+    seed: int = 0,
+    capacity: int = 1 << 16,
+    num_ticks: int | None = None,
+):
+    bcfg = bcfg or BaselineConfig()
+    free, lam = C.init_cluster(cfg, seed)
+    W = free.shape[1]
+    N = cfg.num_nodes
+    group = 32
+    n_leaves = max(1, N // group)
+    bits = bitmap.unpack_bits(free, cfg.atoms_per_node)
+    true_S = jnp.sum(bits, axis=-1).astype(jnp.float32)
+    leaf_S = true_S[: n_leaves * group].reshape(n_leaves, group).sum(axis=-1)
+    s = FluxState(
+        tt=C.TaskTable.empty(capacity, W),
+        free=free,
+        stale_leaf_S=leaf_S,
+        carry=jnp.zeros((), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        key=jax.random.PRNGKey(seed),
+        metrics=C.BaseMetrics.zeros(),
+    )
+    nt = num_ticks if num_ticks is not None else cfg.num_ticks
+    step = make_step(cfg, bcfg, lam)
+    final, _ = jax.jit(lambda s0: jax.lax.scan(step, s0, None, length=nt))(s)
+    out = C.summarize_baseline(cfg, final.metrics, final.tt)
+    out["lambda_per_s"] = lam / cfg.dt_ms * 1e3
+    return out

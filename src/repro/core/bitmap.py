@@ -1,0 +1,207 @@
+"""Resource-atom bitmap substrate (pure jnp).
+
+A node's allocatable capacity is a fixed-length binary bitmap (1 = free atom).
+All feasibility checks and allocations resolve through bitwise / vectorized
+operations, natively embedding spatial fragmentation into the scheduling path
+(§V-A). F-tasks take ``m`` *dispersed* atoms; L-tasks need a *strictly
+contiguous* run of ``m`` atoms — the source of the paper's false-optimism gap.
+
+These functions are also the reference oracles for the Pallas kernels in
+``repro.kernels.bitmap_fit``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UINT = jnp.uint32
+WORD_BITS = 32
+
+# ---------------------------------------------------------------------------
+# word <-> bit-plane conversion
+# ---------------------------------------------------------------------------
+
+
+def unpack_bits(words: jax.Array, atoms: int) -> jax.Array:
+    """(..., W) uint32 words -> (..., atoms) bool (LSB-first)."""
+    w = words.astype(UINT)
+    pos = jnp.arange(WORD_BITS, dtype=UINT)
+    bits = (w[..., :, None] >> pos[None, :]) & UINT(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return bits[..., :atoms].astype(jnp.bool_)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(..., atoms) bool -> (..., W) uint32 words (LSB-first)."""
+    atoms = bits.shape[-1]
+    n_words = (atoms + WORD_BITS - 1) // WORD_BITS
+    pad = n_words * WORD_BITS - atoms
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], pad), dtype=bits.dtype)], axis=-1
+        )
+    b = bits.reshape(*bits.shape[:-1], n_words, WORD_BITS).astype(UINT)
+    pos = jnp.arange(WORD_BITS, dtype=UINT)
+    return jnp.sum(b << pos, axis=-1, dtype=UINT)
+
+
+# ---------------------------------------------------------------------------
+# SWAR popcount (per uint32 word)
+# ---------------------------------------------------------------------------
+
+
+def popcount_words(words: jax.Array) -> jax.Array:
+    """Per-word population count via the 5-step SWAR bit trick."""
+    x = words.astype(UINT)
+    x = x - ((x >> UINT(1)) & UINT(0x55555555))
+    x = (x & UINT(0x33333333)) + ((x >> UINT(2)) & UINT(0x33333333))
+    x = (x + (x >> UINT(4))) & UINT(0x0F0F0F0F)
+    return ((x * UINT(0x01010101)) >> UINT(24)).astype(jnp.int32)
+
+
+def free_atoms(words: jax.Array) -> jax.Array:
+    """Total free atoms per node: sum of per-word popcounts."""
+    return jnp.sum(popcount_words(words), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# contiguous-run analysis on bit planes
+# ---------------------------------------------------------------------------
+
+
+def run_lengths(bits: jax.Array) -> jax.Array:
+    """Per-position length of the contiguous free run ending at that position."""
+    idx = jnp.arange(bits.shape[-1], dtype=jnp.int32)
+    zero_pos = jnp.where(bits, jnp.int32(-1), idx)
+    last_zero = jax.lax.associative_scan(jnp.maximum, zero_pos, axis=-1)
+    return jnp.where(bits, idx - last_zero, 0)
+
+
+def max_run(bits: jax.Array) -> jax.Array:
+    """Longest contiguous free run per node."""
+    return jnp.max(run_lengths(bits), axis=-1)
+
+
+def contiguous_feasible_words(words: jax.Array, m: jax.Array) -> jax.Array:
+    """Run-of-length-``m`` feasibility on single uint32 words via shift-AND
+    doubling: ``ceil(log2 m)`` dense vector steps (TPU-native formulation of
+    the paper's AVX2 feasibility check). Valid for atoms_per_node <= 32.
+
+    ``m`` is broadcast against ``words``; m == 0 is always feasible.
+    """
+    w = words.astype(UINT)
+    m = jnp.asarray(m, jnp.int32)
+    # run-doubling: after the loop with accumulated shift s, a set bit means a
+    # run of >= s+1 ones starts there. We fold min(s, remaining) each step.
+    def body(carry, _):
+        b, s, rem = carry
+        t = jnp.minimum(s, rem)
+        b2 = b & (b >> t.astype(UINT))
+        take = rem > 0
+        b = jnp.where(take, b2, b)
+        rem = rem - t
+        s = s * 2
+        return (b, s, rem), None
+
+    # 5 iterations suffice for m <= 32 (1+2+4+8+16 = 31 >= m-1).
+    (b, _, _), _ = jax.lax.scan(
+        body,
+        (w, jnp.ones_like(m), jnp.maximum(m - 1, 0)),
+        None,
+        length=5,
+    )
+    return jnp.where(m > 0, b != 0, True)
+
+
+# ---------------------------------------------------------------------------
+# allocation (vectorized over nodes)
+# ---------------------------------------------------------------------------
+
+
+def run_totals(bits: jax.Array) -> jax.Array:
+    """Total length of the free run each free atom belongs to (0 if occupied)."""
+    f = run_lengths(bits)
+    b = run_lengths(bits[..., ::-1])[..., ::-1]
+    return jnp.where(bits, f + b - 1, 0)
+
+
+def alloc_dispersed(bits: jax.Array, m: jax.Array):
+    """Lowest-index ``m`` free atoms (first-fit). Returns (alloc_bits, feasible)."""
+    csum = jnp.cumsum(bits.astype(jnp.int32), axis=-1)
+    m = jnp.asarray(m, jnp.int32)[..., None]
+    alloc = bits & (csum <= m)
+    feasible = csum[..., -1:] >= m
+    return jnp.where(feasible, alloc, False), feasible[..., 0]
+
+
+def alloc_dispersed_bestfit(bits: jax.Array, m: jax.Array):
+    """Best-fit dispersed: consume atoms from the *shortest* free runs first,
+    preserving long contiguous runs for L-task demands (anti-fragmentation;
+    beyond-paper optimization, see DESIGN.md)."""
+    A = bits.shape[-1]
+    tot = run_totals(bits)
+    idx = jnp.arange(A, dtype=jnp.int32)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    key = jnp.where(bits, tot * (A + 1) + idx, big)
+    order = jnp.argsort(key, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    m = jnp.asarray(m, jnp.int32)
+    alloc = bits & (rank < m[..., None])
+    feasible = jnp.sum(bits, axis=-1) >= m
+    return jnp.where(feasible[..., None], alloc, False), feasible
+
+
+def alloc_contiguous(bits: jax.Array, m: jax.Array):
+    """First (lowest-index) contiguous run of ``m`` atoms (first-fit)."""
+    rl = run_lengths(bits)
+    m = jnp.asarray(m, jnp.int32)
+    mm = m[..., None]
+    idx = jnp.arange(bits.shape[-1], dtype=jnp.int32)
+    ok = rl >= mm  # positions where a run of >= m *ends*
+    feasible = jnp.any(ok, axis=-1) & (m > 0)
+    end = jnp.argmax(ok, axis=-1).astype(jnp.int32)  # first qualifying end
+    start = end - m + 1
+    alloc = (idx >= start[..., None]) & (idx <= end[..., None])
+    return jnp.where(feasible[..., None], alloc, False), feasible
+
+
+def alloc_contiguous_bestfit(bits: jax.Array, m: jax.Array):
+    """Best-fit contiguous: place the run inside the *smallest* free run that
+    still fits (minimal leftover), earliest position on ties."""
+    A = bits.shape[-1]
+    rl = run_lengths(bits)
+    tot = run_totals(bits)
+    m = jnp.asarray(m, jnp.int32)
+    idx = jnp.arange(A, dtype=jnp.int32)
+    ok = rl >= m[..., None]
+    feasible = jnp.any(ok, axis=-1) & (m > 0)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    key = jnp.where(ok, tot * (A + 1) + idx, big)
+    end = jnp.argmin(key, axis=-1).astype(jnp.int32)
+    start = end - m + 1
+    alloc = (idx >= start[..., None]) & (idx <= end[..., None])
+    return jnp.where(feasible[..., None], alloc, False), feasible
+
+
+def alloc_for_class(
+    bits: jax.Array, m: jax.Array, contiguous: jax.Array, policy: str = "best"
+):
+    """Dispatch on task class. ``contiguous`` broadcasts against node dims."""
+    if policy == "best":
+        a_d, f_d = alloc_dispersed_bestfit(bits, m)
+        a_c, f_c = alloc_contiguous_bestfit(bits, m)
+    else:
+        a_d, f_d = alloc_dispersed(bits, m)
+        a_c, f_c = alloc_contiguous(bits, m)
+    c = jnp.asarray(contiguous, jnp.bool_)
+    alloc = jnp.where(c[..., None], a_c, a_d)
+    feas = jnp.where(c, f_c, f_d)
+    return alloc, feas
+
+
+def feasible_for_class(
+    free: jax.Array, maxrun: jax.Array, m: jax.Array, contiguous: jax.Array
+) -> jax.Array:
+    """Cheap feasibility from summary stats (used against *stale* views)."""
+    return jnp.where(contiguous, maxrun >= m, free >= m)

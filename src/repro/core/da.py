@@ -1,0 +1,170 @@
+"""DA: the Decentralized Agent lifecycle (§III-F, §IV-C).
+
+Phase I (kinetic addressing) lives here: connectionless hops with loss,
+bounded candidate evaluation against the projected Z-HAF field, single-hop
+bounce to j*, patience accounting, Fast-Fail, and TEG-side regeneration of
+lost probes (bounded instances, quiet interval).
+
+Phase II (resident sentinel) and Phase III (secondary reactivation) are
+state-machine modes handled by ``arbiter``/``airlock``; a migrating DA re-uses
+exactly this addressing path (same utility field, same bounded search).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zhaf
+from repro.core.config import LaminarConfig
+from repro.core.state import (
+    ADDRESSING,
+    BOUNCING,
+    EMPTY,
+    LOST_WAIT,
+    QUEUED,
+    ROUTING,
+    SUSPENDED,
+    SimState,
+)
+from repro.core.utility import addressing_score
+
+
+def _dissipate_st(s: SimState, mask: jax.Array) -> jax.Array:
+    """Kill the control incarnation. A migrating DA reverts to the suspended
+    glass-state (the task still awaits T_surv reclamation at the source); an
+    ordinary probe's slot is freed."""
+    st = jnp.where(mask & s.migrating, SUSPENDED, s.st)
+    st = jnp.where(mask & ~s.migrating, EMPTY, st)
+    return st
+
+
+def move(cfg: LaminarConfig, s: SimState, key: jax.Array) -> Tuple[SimState, jax.Array]:
+    """Advance in-flight probes one tick; returns (state, regen_dispatch_mask).
+
+    Packet loss applies to DA *bounce* hops (probe-to-probe fabric traffic).
+    The TEG first-hop rides the gateway fleet's load-balanced delivery path
+    (endpoint table, §IV-A) and is not subject to the probe loss process.
+    """
+    k_loss = key
+    in_flight = (s.st == ROUTING) | (s.st == BOUNCING)
+    timer = jnp.where(in_flight | (s.st == LOST_WAIT), s.timer - 1, s.timer)
+    arrived = in_flight & (timer <= 0)
+
+    lost = (
+        arrived
+        & (s.st == BOUNCING)
+        & (jax.random.uniform(k_loss, s.st.shape) < cfg.hop_loss)
+    )
+    ok = arrived & ~lost
+
+    st = s.st
+    st = jnp.where(ok & (s.st == ROUTING), ADDRESSING, st)
+    st = jnp.where(ok & (s.st == BOUNCING), QUEUED, st)
+
+    m = s.metrics
+    if cfg.regeneration:
+        st = jnp.where(lost, LOST_WAIT, st)
+        timer = jnp.where(lost, cfg.ticks(cfg.regen_quiet_ms), timer)
+    else:
+        st = jnp.where(lost, _dissipate_st(s, lost), st)
+        m = m._replace(lost=m.lost + jnp.sum(lost.astype(jnp.int32)))
+
+    # regeneration: quiet interval elapsed -> respawn via TEG (fresh patience,
+    # bounded instance count), else exhausted -> dissipate.
+    quiet_done = (s.st == LOST_WAIT) & (timer <= 0)
+    can_regen = quiet_done & (s.regen < cfg.regen_cap)
+    exhausted = quiet_done & ~can_regen
+    st = jnp.where(exhausted, _dissipate_st(s, exhausted), st)
+
+    regen = jnp.where(can_regen, s.regen + 1, s.regen)
+    patience = jnp.where(can_regen, s.ev, s.patience)
+
+    if cfg.regeneration:
+        m = m._replace(
+            lost=m.lost + jnp.sum(lost.astype(jnp.int32)),
+            regen_spawned=m.regen_spawned + jnp.sum(can_regen.astype(jnp.int32)),
+            regen_exhausted=m.regen_exhausted
+            + jnp.sum(exhausted.astype(jnp.int32)),
+        )
+
+    s = s._replace(st=st, timer=timer, regen=regen, patience=patience, metrics=m)
+    return s, can_regen
+
+
+def address(
+    cfg: LaminarConfig, s: SimState, key: jax.Array, view: zhaf.NodeView
+) -> SimState:
+    """One bounded addressing round for every kinetic DA (st == ADDRESSING).
+
+    Candidate 0 is the current launchpad; k-1 more are sampled uniformly inside
+    the Zone. Scores come from the projected Z-HAF field; the stale-view
+    feasibility mask (S / max-run vs demand) prunes false candidates. If j* is
+    the launchpad we enqueue locally; otherwise one physical bounce.
+    """
+    P = s.st.shape[0]
+    k = cfg.candidate_k
+    k_cand, k_noise = jax.random.split(key)
+
+    active = s.st == ADDRESSING
+
+    zc = jnp.maximum(s.zcount[s.zone], 1).astype(jnp.float32)
+    r = jax.random.uniform(k_cand, (P, k - 1))
+    cand = s.zstart[s.zone][:, None] + jnp.floor(r * zc[:, None]).astype(jnp.int32)
+    cand = jnp.clip(cand, 0, cfg.num_nodes - 1)
+    cand = jnp.concatenate([jnp.maximum(s.node, 0)[:, None], cand], axis=1)
+
+    s_eff, h_eff, run_eff = zhaf.project(cfg, s, cand)
+    # Candidate 0 is the node the DA is physically standing on: its local
+    # T_zone replica is exact for itself (no staleness), so the launchpad is
+    # evaluated against TRUE local state — stale false-optimism can only come
+    # from remote candidates and is finally rejected at arbitration.
+    here = jnp.maximum(s.node, 0)
+    s_eff = s_eff.at[:, 0].set(view.s_true[here])
+    h_eff = h_eff.at[:, 0].set(view.h_true[here])
+    run_eff = run_eff.at[:, 0].set(view.run_true[here])
+    score = addressing_score(
+        s_eff, h_eff, cfg.gamma_repulsion, cfg.addr_noise_sigma, k_noise
+    )
+    mass_f = s.mass.astype(jnp.float32)[:, None]
+    feas = jnp.where(s.contig[:, None], run_eff >= mass_f, s_eff >= mass_f)
+    score = jnp.where(feas, score, -jnp.inf)
+
+    any_feas = jnp.any(feas, axis=1)
+    best = jnp.argmax(score, axis=1)
+    target = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+
+    # Controlled sub-optimality: a feasible launchpad is "sufficiently good"
+    # unless a remote candidate beats it by more than stay_margin bits.
+    here_ok = feas[:, 0]
+    here_score = jnp.where(here_ok, score[:, 0], -jnp.inf)
+    prefer_here = here_ok & (score[jnp.arange(score.shape[0]), best] <= here_score + cfg.stay_margin)
+    target = jnp.where(prefer_here, jnp.maximum(s.node, 0), target)
+
+    stay = active & any_feas & (target == s.node)
+    bounce = active & any_feas & (target != s.node)
+
+    patience = jnp.where(active, s.patience - cfg.eval_cost, s.patience)
+    patience = jnp.where(bounce, patience - cfg.bounce_cost, patience)
+
+    st = jnp.where(stay, QUEUED, s.st)
+    st = jnp.where(bounce, BOUNCING, st)
+    node = jnp.where(bounce, target, s.node)
+    timer = jnp.where(bounce, 1, s.timer)  # single hop
+    zone = jnp.where(bounce, s.zone_id[target], s.zone)
+
+    # Fast-Fail: patience below the floor dissipates the probe locally.
+    ff = active & (patience < cfg.fastfail_floor)
+    st = jnp.where(ff, _dissipate_st(s._replace(st=st), ff), st)
+
+    m = s.metrics
+    m = m._replace(
+        op_eval=m.op_eval + jnp.sum(active.astype(jnp.int32)),
+        op_bounce=m.op_bounce + jnp.sum((bounce & ~ff).astype(jnp.int32)),
+        fastfail=m.fastfail + jnp.sum(ff.astype(jnp.int32)),
+    )
+    return s._replace(
+        st=st, node=node, zone=zone, timer=timer, patience=patience, metrics=m
+    )

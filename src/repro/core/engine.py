@@ -1,0 +1,270 @@
+"""The Laminar engine: tick-synchronous composition of all subsystems.
+
+One tick = one jitted transition; a run = ``lax.scan`` over ticks. The hot
+path per tick mirrors the paper's control path:
+
+    memory dynamics -> runtime control (Airlock / OOM) -> Airlock
+    transitions -> completions -> node-view build -> Z-HAF reports ->
+    TEG refresh -> arrivals -> probe movement (+ regeneration) ->
+    TEG dispatch -> DA addressing -> node arbitration (xN rounds) ->
+    pending stage -> absolute timeout
+
+Everything is vectorized over the probe table and the node table; there is no
+per-task Python control flow anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import airlock, arbiter, da, teg, workload, zhaf
+from repro.core.config import LaminarConfig
+from repro.core.state import (
+    EMPTY,
+    HIST_BUCKETS,
+    Metrics,
+    SimState,
+    bucket_upper_ms,
+    init_state,
+)
+
+TS_FIELDS = (
+    "arrived",
+    "started",
+    "completed",
+    "oom_kill_l",
+    "oom_kill_f",
+    "reclaimed",
+    "fastfail",
+    "suspended_cnt",
+    "resumed_insitu",
+    "migrated",
+    "timeout",
+)
+
+
+def _inject_arrivals(
+    cfg: LaminarConfig, s: SimState, key: jax.Array, lam_per_tick: float
+) -> Tuple[SimState, jax.Array]:
+    """Sample the open-loop Poisson batch and write it into free probe slots."""
+    k_batch, k_oc, k_ocv = jax.random.split(key, 3)
+    batch = workload.sample_arrivals(cfg, k_batch, lam_per_tick)
+    n_max = cfg.max_arrivals_per_tick
+
+    want = jnp.arange(n_max) < batch.n
+    slots = jnp.nonzero(s.st == EMPTY, size=n_max, fill_value=-1)[0]
+    ok = want & (slots >= 0)
+    slot = jnp.maximum(slots, 0)  # gathers only
+    # scatters drop invalid rows (clamping to 0 could clobber slot 0)
+    tgt = jnp.where(ok, slot, s.st.shape[0])
+
+    mc = cfg.memory
+    oc = (
+        (jax.random.uniform(k_oc, (n_max,)) < mc.overclaim_prob)
+        * jax.random.uniform(k_ocv, (n_max,))
+        * mc.overclaim_max
+    )
+    mem = batch.mass.astype(jnp.float32) * (1.0 + oc) * mc.mem_per_atom
+    mem = mem / cfg.atoms_per_node  # fraction of node capacity
+
+    def put(arr, val):
+        return arr.at[tgt].set(val, mode="drop")
+
+    neg1 = jnp.full((n_max,), -1, jnp.int32)
+    zero_i = jnp.zeros((n_max,), jnp.int32)
+    s = s._replace(
+        contig=put(s.contig, batch.contig),
+        squat=put(s.squat, batch.squat),
+        migrating=put(s.migrating, jnp.zeros((n_max,), jnp.bool_)),
+        mass=put(s.mass, batch.mass),
+        ev=put(s.ev, batch.ev),
+        patience=put(s.patience, batch.patience),
+        deposit=put(s.deposit, jnp.zeros((n_max,), jnp.float32)),
+        pull_dur=put(s.pull_dur, batch.pull),
+        pull_deadline=put(s.pull_deadline, zero_i),
+        surv_deadline=put(s.surv_deadline, zero_i),
+        arrival=put(s.arrival, jnp.full((n_max,), 1, jnp.int32) * s.t),
+        start=put(s.start, neg1),
+        service=put(s.service, batch.service),
+        regen=put(s.regen, zero_i),
+        mem=put(s.mem, mem),
+        alloc=s.alloc.at[tgt].set(jnp.uint32(0), mode="drop"),
+        alloc_node=put(s.alloc_node, neg1),
+        alloc2=s.alloc2.at[tgt].set(jnp.uint32(0), mode="drop"),
+        node2=put(s.node2, neg1),
+    )
+
+    mask = jnp.zeros_like(s.st, jnp.bool_).at[tgt].set(True, mode="drop")
+    n_ok = jnp.sum(ok.astype(jnp.int32))
+    n_f = jnp.sum((ok & ~batch.contig).astype(jnp.int32))
+    m = s.metrics
+    m = m._replace(
+        arrived=m.arrived + n_ok,
+        arrived_f=m.arrived_f + n_f,
+        arrived_l=m.arrived_l + (n_ok - n_f),
+        arrived_squat=m.arrived_squat + jnp.sum((ok & batch.squat).astype(jnp.int32)),
+        dropped_capacity=m.dropped_capacity + (batch.n - n_ok),
+    )
+    return s._replace(metrics=m), mask
+
+
+def make_step(cfg: LaminarConfig, lam_per_tick: float):
+    """Build the one-tick transition (cfg and lambda are closed over)."""
+
+    max_dispatch = cfg.max_arrivals_per_tick + 256
+
+    def step(s: SimState, _) -> Tuple[SimState, jax.Array]:
+        key, *ks = jax.random.split(s.key, 8)
+        s = s._replace(key=key)
+
+        # ---- runtime survival (Exp5) ---------------------------------------
+        if cfg.memory.enabled:
+            s = airlock.memory_dynamics(cfg, s, ks[1])
+            pressure = airlock.node_pressure(cfg, s)
+            s = airlock.runtime_control(cfg, s, pressure)
+            s, react_mask = airlock.airlock_transitions(cfg, s, pressure)
+        else:
+            pressure = jnp.zeros((cfg.num_nodes,), jnp.float32)
+            react_mask = jnp.zeros_like(s.migrating)
+
+        # ---- service progress ------------------------------------------------
+        s = arbiter.completions(cfg, s)
+
+        # ---- true node state, computed once per tick ---------------------------
+        view = zhaf.build_view(cfg, s)
+
+        # ---- cold path: state dissemination -------------------------------
+        s = zhaf.report(cfg, s, ks[0], view)
+        s = teg.refresh(cfg, s)
+
+        # ---- admissions hot path ----------------------------------------------
+        s, arrival_mask = _inject_arrivals(cfg, s, ks[2], lam_per_tick)
+        s, regen_mask = da.move(cfg, s, ks[3])
+        dispatch_mask = arrival_mask | regen_mask | react_mask
+        s = teg.dispatch(cfg, s, ks[4], dispatch_mask, max_dispatch)
+        s = da.address(cfg, s, ks[5], view)
+
+        throttled = (
+            (pressure > cfg.memory.high_watermark)
+            if (cfg.memory.enabled and cfg.airlock)
+            else jnp.zeros((cfg.num_nodes,), jnp.bool_)
+        )
+        # multiple admission rounds per tick: after each reservation the node
+        # removes the winner's atoms and proceeds to the next feasible candidate
+        bits = view.bits
+        for _ in range(cfg.arb_rounds):
+            s, bits = arbiter.arbitrate(cfg, s, ks[6], throttled, bits)
+        s = arbiter.pending_stage(cfg, s)
+        s = arbiter.timeouts(cfg, s)
+
+        s = s._replace(t=s.t + 1)
+        ts = jnp.stack([getattr(s.metrics, f) for f in TS_FIELDS])
+        return s, ts
+
+    return step
+
+
+class LaminarEngine:
+    """Build, run, and summarize Laminar simulations."""
+
+    def __init__(self, cfg: LaminarConfig):
+        self.cfg = cfg
+        self._compiled = {}
+
+    def init(self, seed: int = 0) -> Tuple[SimState, float]:
+        s = init_state(self.cfg, seed)
+        free_atoms = float(np.asarray(s.rep_S).sum())
+        lam = workload.lambda_per_tick(self.cfg, free_atoms)
+        return s, lam
+
+    def _runner(self, lam: float, num_ticks: int):
+        key = (round(lam, 6), num_ticks)
+        if key not in self._compiled:
+            step = make_step(self.cfg, lam)
+
+            def run(s: SimState):
+                return jax.lax.scan(step, s, None, length=num_ticks)
+
+            self._compiled[key] = jax.jit(run)
+        return self._compiled[key]
+
+    def run(self, seed: int = 0, num_ticks: int | None = None) -> Dict[str, Any]:
+        s, lam = self.init(seed)
+        nt = num_ticks if num_ticks is not None else self.cfg.num_ticks
+        final, ts = self._runner(lam, nt)(s)
+        out = summarize(self.cfg, final, np.asarray(ts))
+        out["lambda_per_s"] = lam / self.cfg.dt_ms * 1e3
+        return out
+
+
+def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, Any]:
+    from repro.core.state import LOST_WAIT, RUNNING
+
+    m: Metrics = jax.tree.map(np.asarray, final.metrics)
+    arrived = max(int(m.arrived), 1)
+    started = max(int(m.started), 1)
+
+    # horizon censoring: control probes still in flight at the end of the run
+    st = np.asarray(final.st)
+    mig = np.asarray(final.migrating)
+    squat = np.asarray(final.squat)
+    ctl = (((st > EMPTY) & (st < RUNNING)) | (st == LOST_WAIT)) & ~mig
+    in_flight = int(ctl.sum())
+    in_flight_nonsquat = int((ctl & ~squat).sum())
+
+    hist = np.asarray(m.lat_hist, np.float64)
+    total = hist.sum()
+    if total > 0:
+        c = np.cumsum(hist) / total
+        uppers = bucket_upper_ms(np.arange(HIST_BUCKETS))
+        p50 = float(uppers[int(np.searchsorted(c, 0.50))])
+        p99 = float(uppers[int(np.searchsorted(c, 0.99))])
+    else:
+        p50 = p99 = float("nan")
+
+    k = cfg.candidate_k
+    work_ns = (
+        float(m.op_dispatch) * cfg.ns_utility_score
+        + float(m.op_eval) * (cfg.ns_utility_score + k * cfg.ns_bitmap_check)
+        + float(m.op_bounce) * cfg.ns_bitmap_check
+        + float(m.op_arb) * cfg.ns_bitmap_check
+        + float(m.op_dispatch) * cfg.ns_zone_aggregate * 0.0  # cold path excluded
+    )
+
+    probe_drops = (
+        int(m.fastfail)
+        + int(m.lost)
+        + int(m.regen_exhausted)
+        + int(m.timeout)
+        + int(m.reclaimed)
+        + int(m.reserve_expired)
+    )
+
+    out: Dict[str, Any] = {
+        f: int(getattr(m, f)) for f in Metrics._fields if f != "lat_hist"
+    }
+    out.update(
+        start_success_ratio=float(m.started) / max(arrived - in_flight, 1),
+        start_success_raw=float(m.started) / arrived,
+        # squatters never intend to start; Exp4's meaningful ratio excludes
+        # them from the population (they are the ATTACK, not the workload)
+        start_success_nonsquat=float(m.started)
+        / max(arrived - int(m.arrived_squat) - in_flight_nonsquat, 1),
+        in_flight_end=in_flight,
+        completed_success_ratio=float(m.completed)
+        / max(arrived - in_flight, 1),
+        exec_survival_ratio=1.0
+        - (float(m.oom_kill_f + m.oom_kill_l) + float(m.reclaimed)) / started,
+        p50_ms=p50,
+        p99_ms=p99,
+        control_us_per_start=work_ns / started / 1e3,
+        probe_drops=probe_drops,
+        lat_hist=hist,
+        timeseries={f: ts[:, i] for i, f in enumerate(TS_FIELDS)},
+    )
+    return out

@@ -1,0 +1,270 @@
+"""Engine state: a fixed-shape, fully-vectorized pytree.
+
+The Laminar engine is a *tick-synchronous* reformulation of the paper's
+discrete-event simulator: every control object (probe / DA) occupies a slot in
+a structure-of-arrays table and advances its own state machine each tick; all
+node-level work is expressed as segmented reductions over those arrays. This is
+the JAX-native adaptation — no event heap, everything `lax.scan`-able.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap
+from repro.core.config import LaminarConfig
+
+# ---------------------------------------------------------------------------
+# probe (DA) state machine codes
+# ---------------------------------------------------------------------------
+EMPTY = 0  # free slot
+ROUTING = 1  # dispatched by TEG, in flight to launchpad
+ADDRESSING = 2  # at a node, evaluating Z-HAF candidates (kinetic DA)
+BOUNCING = 3  # single-hop physical redirection to j*
+QUEUED = 4  # in a node's arbitration queue (counts toward Heat)
+RESERVED = 5  # won arbitration; two-phase pending stage (payload pull)
+RUNNING = 6  # executing; DA is a resident sentinel
+SUSPENDED = 7  # Airlock glass-state (in-situ window T_susp)
+LOST_WAIT = 8  # control packet lost; awaiting regeneration quiet interval
+NUM_STATES = 9
+
+LIVE_CONTROL = (ROUTING, ADDRESSING, BOUNCING, QUEUED, RESERVED, LOST_WAIT)
+
+
+class Metrics(NamedTuple):
+    arrived: jax.Array
+    arrived_f: jax.Array
+    arrived_l: jax.Array
+    arrived_squat: jax.Array
+    dropped_capacity: jax.Array
+    started: jax.Array
+    started_f: jax.Array
+    started_l: jax.Array
+    completed: jax.Array
+    completed_f: jax.Array
+    completed_l: jax.Array
+    fastfail: jax.Array
+    lost: jax.Array
+    regen_spawned: jax.Array
+    regen_exhausted: jax.Array
+    timeout: jax.Array
+    squat_expired: jax.Array
+    reserve_expired: jax.Array
+    infeasible_winner: jax.Array
+    oom_kill_f: jax.Array
+    oom_kill_l: jax.Array
+    suspended_cnt: jax.Array
+    resumed_insitu: jax.Array
+    reactivated: jax.Array
+    migrated: jax.Array
+    reclaimed: jax.Array
+    throttled_rounds: jax.Array
+    # control-work op counters (multiplied by ns constants at summary time)
+    op_dispatch: jax.Array
+    op_eval: jax.Array
+    op_bounce: jax.Array
+    op_arb: jax.Array
+    # arrival->start latency histogram (log buckets)
+    lat_hist: jax.Array
+
+    @staticmethod
+    def zeros(hist_buckets: int = 64) -> "Metrics":
+        z = jnp.zeros((), jnp.int32)
+        n_scalars = len(Metrics._fields) - 1
+        return Metrics(
+            *([z] * n_scalars), lat_hist=jnp.zeros((hist_buckets,), jnp.int32)
+        )
+
+
+HIST_BUCKETS = 64
+HIST_MIN_MS = 0.25
+HIST_PER_OCTAVE = 4.0
+
+
+def latency_bucket(lat_ms: jax.Array) -> jax.Array:
+    b = jnp.floor(jnp.log2(jnp.maximum(lat_ms, HIST_MIN_MS) / HIST_MIN_MS) * HIST_PER_OCTAVE)
+    return jnp.clip(b.astype(jnp.int32), 0, HIST_BUCKETS - 1)
+
+
+def bucket_upper_ms(i: np.ndarray) -> np.ndarray:
+    return HIST_MIN_MS * 2.0 ** ((i + 1) / HIST_PER_OCTAVE)
+
+
+class SimState(NamedTuple):
+    t: jax.Array  # current tick (i32)
+    key: jax.Array  # PRNG key
+
+    # ---- probe / DA table (P,) ------------------------------------------
+    st: jax.Array  # state machine code
+    zone: jax.Array  # current zone
+    node: jax.Array  # current / target node
+    contig: jax.Array  # L-task (strictly contiguous demand)
+    squat: jax.Array  # squatter (never completes payload pull)
+    migrating: jax.Array  # DA in secondary-reactivation epoch
+    mass: jax.Array  # atoms demanded (i32)
+    ev: jax.Array  # E_v,init static routing weight (f32)
+    patience: jax.Array  # remaining E_patience (f32)
+    deposit: jax.Array  # frozen deposit while pending (f32)
+    timer: jax.Array  # generic countdown: hop / pull / quiet (i32 ticks)
+    pull_dur: jax.Array  # pre-sampled payload pull duration (i32 ticks)
+    pull_deadline: jax.Array  # reservation expiry tick (i32)
+    surv_deadline: jax.Array  # shared survival TTL expiry tick (i32)
+    susp_tick: jax.Array  # tick at which suspension began
+    arrival: jax.Array  # arrival tick
+    start: jax.Array  # execution start tick (-1 before)
+    service: jax.Array  # remaining service ticks while RUNNING
+    regen: jax.Array  # regeneration instances used
+    mem: jax.Array  # true physical memory usage while resident (f32)
+    alloc: jax.Array  # (P, W) held atom words at alloc_node
+    alloc_node: jax.Array  # node where atoms are held (-1 none)
+    alloc2: jax.Array  # (P, W) destination reservation during migration
+    node2: jax.Array  # destination node during migration (-1 none)
+
+    # ---- node table (N,) --------------------------------------------------
+    free: jax.Array  # (N, W) free-atom bitmap words
+    zone_id: jax.Array
+    rep_S: jax.Array  # reported (stale) slack
+    rep_H: jax.Array  # reported (stale) heat
+    rep_run: jax.Array  # reported (stale) max contiguous run
+    rep_t: jax.Array  # tick of last successful report
+    dS: jax.Array  # EMA slack derivative (atoms / ms)
+    dH: jax.Array
+    next_rep: jax.Array  # next report tick
+    amb: jax.Array  # ambient memory perturbation (AR(1), fraction of cap)
+    rigid_mem: jax.Array  # rigid-topology resident memory (fraction of cap)
+
+    # ---- zone table (Z,) ---------------------------------------------------
+    zstart: jax.Array
+    zcount: jax.Array
+    zS: jax.Array  # TEG aggregate: mean reported slack
+    zH: jax.Array  # TEG aggregate: total reported heat
+
+    metrics: Metrics
+
+
+def build_zones(cfg: LaminarConfig, rng: np.random.Generator):
+    """Heterogeneous contiguous zones (target size +/- jitter)."""
+    sizes = []
+    left = cfg.num_nodes
+    while left > 0:
+        j = 1.0 + rng.uniform(-cfg.zone_size_jitter, cfg.zone_size_jitter)
+        s = int(max(8, min(left, round(cfg.zone_size * j))))
+        if left - s < 8:
+            s = left
+        sizes.append(s)
+        left -= s
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+    counts = np.asarray(sizes, np.int32)
+    zone_id = np.repeat(np.arange(len(sizes), dtype=np.int32), counts)
+    return starts, counts, zone_id
+
+
+def paint_rigid(cfg: LaminarConfig, rng: np.random.Generator):
+    """Pre-occupy node bitmaps with rigid-topology chunks (post-landing ecology)."""
+    A = cfg.atoms_per_node
+    n = cfg.num_nodes
+    bits = np.ones((n, A), dtype=bool)  # True = free
+    frac = rng.uniform(cfg.rigid_frac_lo, cfg.rigid_frac_hi, size=n)
+    occupied = np.zeros(n, np.int32)
+    target = (frac * A).astype(np.int32)
+    for _ in range(cfg.rigid_chunks):
+        remaining = np.maximum(target - occupied, 0)
+        chunk = np.ceil(remaining / max(1, cfg.rigid_chunks)).astype(np.int32)
+        chunk = np.minimum(chunk, remaining)
+        start = rng.integers(0, A, size=n)
+        for i in range(n):  # init-time only; O(N * A) host work
+            c = int(chunk[i])
+            if c == 0:
+                continue
+            s = int(start[i])
+            e = min(s + c, A)
+            taken = int(bits[i, s:e].sum())
+            bits[i, s:e] = False
+            occupied[i] += taken
+    rigid_atoms = A - bits.sum(axis=1)
+    return bits, rigid_atoms.astype(np.float32)
+
+
+def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
+    rng = np.random.default_rng(seed)
+    P = cfg.probe_capacity
+    N = cfg.num_nodes
+    W = max(1, (cfg.atoms_per_node + 31) // 32)
+
+    zstart, zcount, zone_id = build_zones(cfg, rng)
+    Z = len(zcount)
+    bits, rigid_atoms = paint_rigid(cfg, rng)
+    free_words = np.asarray(bitmap.pack_bits(jnp.asarray(bits)))
+
+    free0 = bits.sum(axis=1).astype(np.float32)
+    run0 = np.zeros(N, np.float32)
+    for i in range(N):
+        r = best = 0
+        for b in bits[i]:
+            r = r + 1 if b else 0
+            best = max(best, r)
+        run0[i] = best
+
+    zS0 = np.zeros(Z, np.float32)
+    zH0 = np.zeros(Z, np.float32)
+    for z in range(Z):
+        sl = slice(zstart[z], zstart[z] + zcount[z])
+        zS0[z] = free0[sl].mean()
+
+    i32 = lambda x: jnp.asarray(x, jnp.int32)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    zero_p_i = jnp.zeros((P,), jnp.int32)
+    zero_p_f = jnp.zeros((P,), jnp.float32)
+    zero_p_b = jnp.zeros((P,), jnp.bool_)
+
+    rep_interval = cfg.ticks(cfg.report_interval_ms + cfg.extra_sync_delay_ms)
+    first_rep = rng.integers(0, rep_interval, size=N)
+
+    return SimState(
+        t=jnp.zeros((), jnp.int32),
+        key=jax.random.PRNGKey(seed),
+        st=zero_p_i,
+        zone=zero_p_i,
+        node=jnp.full((P,), -1, jnp.int32),
+        contig=zero_p_b,
+        squat=zero_p_b,
+        migrating=zero_p_b,
+        mass=zero_p_i,
+        ev=zero_p_f,
+        patience=zero_p_f,
+        deposit=zero_p_f,
+        timer=zero_p_i,
+        pull_dur=zero_p_i,
+        pull_deadline=zero_p_i,
+        surv_deadline=zero_p_i,
+        susp_tick=zero_p_i,
+        arrival=zero_p_i,
+        start=jnp.full((P,), -1, jnp.int32),
+        service=zero_p_i,
+        regen=zero_p_i,
+        mem=zero_p_f,
+        alloc=jnp.zeros((P, W), jnp.uint32),
+        alloc_node=jnp.full((P,), -1, jnp.int32),
+        alloc2=jnp.zeros((P, W), jnp.uint32),
+        node2=jnp.full((P,), -1, jnp.int32),
+        free=jnp.asarray(free_words, jnp.uint32).reshape(N, W),
+        zone_id=i32(zone_id),
+        rep_S=f32(free0),
+        rep_H=jnp.zeros((N,), jnp.float32),
+        rep_run=f32(run0),
+        rep_t=jnp.zeros((N,), jnp.int32),
+        dS=jnp.zeros((N,), jnp.float32),
+        dH=jnp.zeros((N,), jnp.float32),
+        next_rep=i32(first_rep),
+        amb=jnp.zeros((N,), jnp.float32),
+        rigid_mem=f32(rigid_atoms / cfg.atoms_per_node),
+        zstart=i32(zstart),
+        zcount=i32(zcount),
+        zS=f32(zS0),
+        zH=f32(zH0),
+        metrics=Metrics.zeros(HIST_BUCKETS),
+    )

@@ -1,0 +1,83 @@
+"""TEG: Thermo-Economic Gateway (§III-D, §IV-A).
+
+Macroscopic probabilistic flow splitting over *Zone-level aggregates only*:
+
+    P(z) = 2^(U_z / tau) / sum_r 2^(U_r / tau)
+
+Probabilistic splitting (not argmax) prevents concurrent arrivals from herding
+onto the single most attractive Zone. TEG is agnostic to whether a DA is in its
+initial admission epoch or a secondary-reactivation epoch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LaminarConfig
+from repro.core.state import ROUTING, SimState
+from repro.core.utility import unified_utility, zone_routing_logits
+
+
+def refresh(cfg: LaminarConfig, s: SimState) -> SimState:
+    """Refresh T_global (zone aggregates) from the Z-HAF reported view."""
+    every = cfg.ticks(cfg.teg_refresh_ms)
+    due = (s.t % every) == 0
+
+    Z = len(s.zstart)
+    seg = jnp.zeros((Z,), jnp.float32)
+    zS = seg.at[s.zone_id].add(s.rep_S) / jnp.maximum(s.zcount, 1)
+    zH = seg.at[s.zone_id].add(s.rep_H)
+    return s._replace(
+        zS=jnp.where(due, zS, s.zS),
+        zH=jnp.where(due, zH, s.zH),
+    )
+
+
+def dispatch(
+    cfg: LaminarConfig,
+    s: SimState,
+    key: jax.Array,
+    mask: jax.Array,
+    max_dispatch: int,
+) -> SimState:
+    """Route every probe in ``mask`` to a launchpad node in a sampled Zone.
+
+    Gather-compute-scatter over at most ``max_dispatch`` slots so the
+    (slots x zones) categorical sampling stays small and fixed-shape.
+    """
+    k_zone, k_node = jax.random.split(key)
+    Z = len(s.zstart)
+
+    idx = jnp.nonzero(mask, size=max_dispatch, fill_value=-1)[0]
+    valid = idx >= 0
+    slot = jnp.maximum(idx, 0)  # safe for gathers only
+    # scatters must DROP invalid rows: clamping them to slot 0 would write
+    # stale values over a genuine dispatch to slot 0 (duplicate-index scatter
+    # order is unspecified).
+    scat_idx = jnp.where(valid, idx, s.st.shape[0])
+
+    u = unified_utility(s.zS, s.zH, cfg.gamma_repulsion)
+    logits = zone_routing_logits(u, cfg.teg_temperature)  # (Z,)
+    gumbel = jax.random.gumbel(k_zone, (max_dispatch, Z))
+    zone = jnp.argmax(logits[None, :] + gumbel, axis=-1).astype(jnp.int32)
+
+    # uniform launchpad within the selected zone
+    r = jax.random.uniform(k_node, (max_dispatch,))
+    launch = s.zstart[zone] + jnp.floor(
+        r * s.zcount[zone].astype(jnp.float32)
+    ).astype(jnp.int32)
+    launch = jnp.clip(launch, 0, cfg.num_nodes - 1)
+
+    def scat(arr, val):
+        return arr.at[scat_idx].set(val, mode="drop")
+
+    m = s.metrics
+    n_disp = jnp.sum(valid.astype(jnp.int32))
+    return s._replace(
+        st=scat(s.st, jnp.full((max_dispatch,), ROUTING, jnp.int32)),
+        zone=scat(s.zone, zone),
+        node=scat(s.node, launch),
+        timer=scat(s.timer, jnp.ones((max_dispatch,), jnp.int32)),  # 1 hop
+        metrics=m._replace(op_dispatch=m.op_dispatch + n_disp),
+    )

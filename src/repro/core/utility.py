@@ -1,0 +1,40 @@
+"""Unified utility field (§III-C).
+
+TEG's macroscopic flow splitting and DA's microscopic node addressing share a
+single utility definition:
+
+    U = log2(1 + S_pred) - gamma * log2(1 + H_pred)
+
+TEG maps zone-level utility to a routing probability distribution; DA adds a
+zero-mean Gaussian perturbation and performs a finite discrete choice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def log2p1(x: jax.Array) -> jax.Array:
+    return jnp.log2(1.0 + jnp.maximum(x, 0.0))
+
+
+def unified_utility(s_pred: jax.Array, h_pred: jax.Array, gamma: float) -> jax.Array:
+    return log2p1(s_pred) - gamma * log2p1(h_pred)
+
+
+def addressing_score(
+    s_pred: jax.Array,
+    h_pred: jax.Array,
+    gamma: float,
+    noise_sigma: float,
+    key: jax.Array,
+) -> jax.Array:
+    """Addr_j = log2(1+S_pred) - gamma*log2(1+H_pred) + eps,  eps ~ N(0, sigma^2)."""
+    eps = noise_sigma * jax.random.normal(key, s_pred.shape)
+    return unified_utility(s_pred, h_pred, gamma) + eps
+
+
+def zone_routing_logits(zone_utility: jax.Array, temperature: float) -> jax.Array:
+    """P(z) = 2^(U_z/tau) / sum_r 2^(U_r/tau)  ==  softmax(U ln2 / tau)."""
+    return zone_utility * (jnp.log(2.0) / temperature)

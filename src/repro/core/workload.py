@@ -1,0 +1,84 @@
+"""Bimodal open-loop Poisson workload generation (§V-A).
+
+All sampling is vectorized per tick: we draw ``max_arrivals_per_tick``
+candidate tasks and mask the first ``n`` of them by the Poisson draw, keeping
+the tick function fixed-shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LaminarConfig
+
+
+class ArrivalBatch(NamedTuple):
+    n: jax.Array  # number of real arrivals this tick (<= n_max)
+    contig: jax.Array  # L-task flag
+    squat: jax.Array
+    mass: jax.Array
+    ev: jax.Array  # E_v,init = p_i * m_i  (energy contract)
+    patience: jax.Array  # E_patience(0) = E_i(0)
+    service: jax.Array  # service duration in ticks
+    pull: jax.Array  # payload pull duration in ticks
+
+
+def _choice(key, values, probs, shape):
+    v = jnp.asarray(values, jnp.float32)
+    p = jnp.asarray(probs, jnp.float32)
+    idx = jax.random.choice(key, len(values), shape=shape, p=p / p.sum())
+    return v[idx]
+
+
+def sample_arrivals(cfg: LaminarConfig, key: jax.Array, lam_per_tick: float) -> ArrivalBatch:
+    w = cfg.workload
+    n_max = cfg.max_arrivals_per_tick
+    ks = jax.random.split(key, 10)
+    n = jnp.minimum(
+        jax.random.poisson(ks[0], lam_per_tick), n_max
+    ).astype(jnp.int32)
+
+    is_l = jax.random.uniform(ks[1], (n_max,)) >= w.f_share
+    squat = jax.random.uniform(ks[2], (n_max,)) < w.squatter_ratio
+
+    mass_f = _choice(ks[3], w.f_masses, w.f_mass_probs, (n_max,))
+    mass_l = _choice(ks[4], w.l_masses, w.l_mass_probs, (n_max,))
+    mass = jnp.where(is_l, mass_l, mass_f).astype(jnp.int32)
+
+    pri_f = _choice(ks[5], w.f_priorities, w.f_priority_probs, (n_max,))
+    pri_l = _choice(ks[6], w.l_priorities, w.l_priority_probs, (n_max,))
+    prio = jnp.where(is_l, pri_l, pri_f)
+
+    ev = prio * mass.astype(jnp.float32)  # E_i(0) = p_i * m_i
+
+    # F: exponential service; L: lognormal (heavier tail).
+    u = jax.random.exponential(ks[7], (n_max,))
+    svc_f = u * w.f_service_mean_ms
+    g = jax.random.normal(ks[8], (n_max,))
+    svc_l = w.l_service_median_ms * jnp.exp(w.l_service_sigma * g)
+    svc_ms = jnp.where(is_l, svc_l, svc_f)
+    service = jnp.maximum(1, jnp.round(svc_ms / cfg.dt_ms)).astype(jnp.int32)
+
+    pull_mean = jnp.where(is_l, cfg.l_pull_mean_ms, cfg.f_pull_mean_ms)
+    pull_ms = jax.random.exponential(ks[9], (n_max,)) * pull_mean
+    pull = jnp.maximum(1, jnp.round(pull_ms / cfg.dt_ms)).astype(jnp.int32)
+
+    return ArrivalBatch(
+        n=n,
+        contig=is_l,
+        squat=squat,
+        mass=mass,
+        ev=ev,
+        patience=ev,
+        service=service,
+        pull=pull,
+    )
+
+
+def lambda_per_tick(cfg: LaminarConfig, free_atoms_total: float) -> float:
+    """Open-loop arrival intensity per tick for the configured rho."""
+    lam_s = cfg.arrival_rate_per_s(free_atoms_total)
+    return lam_s * cfg.dt_ms / 1e3

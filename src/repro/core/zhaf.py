@@ -1,0 +1,108 @@
+"""Z-HAF: Zone Holographic Availability Field (§III-E, §IV-B).
+
+Maintains the per-node reported (stale) state view with:
+  * staggered, jittered node reports (anti-incast), subject to packet loss;
+  * smoothed first-order derivatives and Taylor projection
+        S_pred = max(0, S + tau_i * S_dot);
+  * the short-project / long-degrade missing-data rule (silent nodes become
+    conservatively unattractive rather than falsely optimistic).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap
+from repro.core.config import LaminarConfig
+from repro.core.state import QUEUED, SimState
+
+
+class NodeView(NamedTuple):
+    """True node state, computed once per tick and shared by all subsystems."""
+
+    bits: jax.Array  # (N, A) free-atom bit plane
+    s_true: jax.Array  # (N,) free atoms
+    h_true: jax.Array  # (N,) pending DA count (Heat)
+    run_true: jax.Array  # (N,) longest contiguous free run
+
+
+def node_heat(cfg: LaminarConfig, s: SimState) -> jax.Array:
+    """Heat = count of pending DAs in each node's arbitration queue."""
+    queued = (s.st == QUEUED).astype(jnp.int32)
+    tgt = jnp.where(s.st == QUEUED, s.node, cfg.num_nodes)  # OOB -> dropped
+    h = jnp.zeros((cfg.num_nodes + 1,), jnp.int32).at[tgt].add(queued)
+    return h[:-1]
+
+
+def build_view(cfg: LaminarConfig, s: SimState) -> NodeView:
+    bits = bitmap.unpack_bits(s.free, cfg.atoms_per_node)
+    s_true = jnp.sum(bits, axis=-1).astype(jnp.float32)
+    run_true = bitmap.max_run(bits).astype(jnp.float32)
+    h_true = node_heat(cfg, s).astype(jnp.float32)
+    return NodeView(bits, s_true, h_true, run_true)
+
+
+def report(cfg: LaminarConfig, s: SimState, key: jax.Array, view: NodeView) -> SimState:
+    """Fire due node reports (base interval + Gaussian jitter, 1% loss)."""
+    k_loss, k_jit = jax.random.split(key)
+    due = s.t >= s.next_rep
+    delivered = due & (jax.random.uniform(k_loss, (cfg.num_nodes,)) >= cfg.hop_loss)
+
+    s_true, h_true, run_true = view.s_true, view.h_true, view.run_true
+
+    dt_ms = jnp.maximum((s.t - s.rep_t).astype(jnp.float32) * cfg.dt_ms, cfg.dt_ms)
+    a = cfg.deriv_ema
+    dS_new = (1 - a) * s.dS + a * (s_true - s.rep_S) / dt_ms
+    dH_new = (1 - a) * s.dH + a * (h_true - s.rep_H) / dt_ms
+
+    interval = cfg.ticks(cfg.report_interval_ms + cfg.extra_sync_delay_ms)
+    jitter = (
+        cfg.report_jitter_frac
+        * interval
+        * jax.random.normal(k_jit, (cfg.num_nodes,))
+    )
+    next_rep = jnp.where(
+        due,
+        s.t + jnp.maximum(1, interval + jitter.astype(jnp.int32)),
+        s.next_rep,
+    )
+
+    return s._replace(
+        rep_S=jnp.where(delivered, s_true, s.rep_S),
+        rep_H=jnp.where(delivered, h_true, s.rep_H),
+        rep_run=jnp.where(delivered, run_true, s.rep_run),
+        rep_t=jnp.where(delivered, s.t, s.rep_t),
+        dS=jnp.where(delivered, dS_new, s.dS),
+        dH=jnp.where(delivered, dH_new, s.dH),
+        next_rep=next_rep,
+    )
+
+
+def project(cfg: LaminarConfig, s: SimState, node_idx: jax.Array):
+    """Projected + degrade-adjusted (S_pred, H_pred) for gathered node indices.
+
+    Applies the Taylor projection with sensing delay tau_i, then the
+    long-degrade rule: silence beyond ``degrade_after_ms`` exponentially lowers
+    visible slack and raises visible heat (no false optimism).
+    """
+    rep_S = s.rep_S[node_idx]
+    rep_H = s.rep_H[node_idx]
+    rep_run = s.rep_run[node_idx]
+
+    if cfg.projection:
+        tau = cfg.sense_delay_ms
+        s_pred = jnp.maximum(0.0, rep_S + tau * s.dS[node_idx])
+        h_pred = jnp.maximum(0.0, rep_H + tau * s.dH[node_idx])
+    else:
+        s_pred, h_pred = rep_S, rep_H
+
+    age_ms = (s.t - s.rep_t[node_idx]).astype(jnp.float32) * cfg.dt_ms
+    over = jnp.maximum(0.0, age_ms - cfg.degrade_after_ms)
+    factor = jnp.exp2(-over / cfg.degrade_halflife_ms)
+    s_eff = s_pred * factor
+    h_eff = h_pred / jnp.maximum(factor, 1e-6)
+    run_eff = rep_run * factor
+    return s_eff, h_eff, run_eff

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for Laminar's control-plane hot spots (§V-A).
+
+The paper micro-optimizes three hot-path operations on AVX2 (bitmap
+feasibility 4.02 ns, DA utility scoring 13.7 ns, zone aggregation 29.3 ns).
+TPUs have no scalar SIMD path, so the TPU-native adaptation re-blocks each op
+over the (8, 128) vector lanes with explicit VMEM tiling:
+
+  * :mod:`repro.kernels.bitmap_fit`    — batched demand-mask feasibility
+    (SWAR popcount + shift-AND run-doubling with cross-word carry)
+  * :mod:`repro.kernels.utility_topk`  — fused utility scoring + candidate
+    argmax over the projected Z-HAF field
+  * :mod:`repro.kernels.zone_aggregate`— segmented Zone slack/heat reduction
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper; interpret=True on CPU), ``ref.py`` (pure-jnp oracle).
+"""
+
+from repro.kernels.bitmap_fit import ops as bitmap_fit
+from repro.kernels.utility_topk import ops as utility_topk
+from repro.kernels.zone_aggregate import ops as zone_aggregate
+
+__all__ = ["bitmap_fit", "utility_topk", "zone_aggregate"]

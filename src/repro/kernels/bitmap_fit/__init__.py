@@ -1,0 +1,3 @@
+from repro.kernels.bitmap_fit.ops import bitmap_fit, bitmap_fit_ref
+
+__all__ = ["bitmap_fit", "bitmap_fit_ref"]

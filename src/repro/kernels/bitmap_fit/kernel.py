@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: batched resource-atom bitmap feasibility.
+
+TPU adaptation of the paper's AVX2 bitmap check (4.02 ns/node): instead of a
+scalar SIMD loop per node, one kernel invocation tests a whole *tile* of nodes
+against their demands in VMEM.
+
+  * dispersed demand (F-tasks):   SWAR popcount over the tile, sum >= m
+  * contiguous demand (L-tasks):  shift-AND run-doubling — after folding with
+    accumulated shifts 1, 2, 4, ... a surviving set bit proves a free run of
+    length >= m. Cross-word carries are funnel shifts between adjacent words,
+    and the per-node fold amounts are data-dependent (per-lane variable
+    shifts, which the VPU supports natively).
+
+Layout: bitmap words arrive as (nodes, W) int32. The kernel tiles nodes into
+blocks of ``BLOCK_N`` rows; W (words per node, atoms/32) is static and small,
+so each block is a (BLOCK_N, W) VMEM tile and the fold unrolls over W in
+registers. All compute is int32 vector ALU work — no MXU involvement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+I32 = jnp.int32
+
+
+def _popcount(x: jax.Array) -> jax.Array:
+    """5-step SWAR popcount on int32 (bit-identical to uint32 popcount)."""
+    m1 = I32(0x55555555)
+    m2 = I32(0x33333333)
+    m4 = I32(0x0F0F0F0F)
+    x = x - ((x >> 1) & m1)
+    x = (x & m2) + ((x >> 2) & m2)
+    x = (x + (x >> 4)) & m4
+    # final fold without the *0x01010101 multiply (keeps int32 exact)
+    x = x + (x >> 8)
+    x = x + (x >> 16)
+    return x & I32(0x7F)
+
+
+def _shr128(words: list[jax.Array], t: jax.Array) -> list[jax.Array]:
+    """Logical right shift of the W*32-bit lane-bitmap by per-lane t in [0, 32].
+
+    words[0] is least-significant. Funnel shift between adjacent words; the
+    t == 32 and t == 0 edge cases fall out of XLA's defined shift semantics
+    (shift >= bitwidth -> 0).
+    """
+    W = len(words)
+    t = t.astype(I32)
+    lo_mask = (t < 32).astype(I32) * -1  # all-ones where t < 32
+    out = []
+    for i in range(W):
+        cur = words[i]
+        nxt = words[i + 1] if i + 1 < W else jnp.zeros_like(cur)
+        # (cur >>> t) | (nxt <<< (32 - t)) as unsigned ops on int32
+        srl = jax.lax.shift_right_logical(cur, jnp.minimum(t, 31)) & lo_mask
+        srl = jnp.where(t == 32, jnp.zeros_like(cur), srl)
+        sll = jax.lax.shift_left(nxt, jnp.maximum(32 - t, 0))
+        sll = jnp.where(t == 0, jnp.zeros_like(cur), sll)
+        sll = jnp.where(t == 32, nxt, sll)
+        out.append(srl | sll)
+    return out
+
+
+def _fit_kernel(words_ref, mass_ref, contig_ref, feas_ref, *, W: int):
+    words = [words_ref[:, i].astype(I32) for i in range(W)]
+    m = mass_ref[:].astype(I32)
+    contig = contig_ref[:] != 0
+
+    # --- dispersed: total popcount ----------------------------------------
+    pc = jnp.zeros_like(m)
+    for w in words:
+        pc = pc + _popcount(w)
+    disp_ok = pc >= m
+
+    # --- contiguous: run-doubling fold with data-dependent amounts ---------
+    b = list(words)
+    rem = jnp.maximum(m - 1, 0)
+    s = jnp.ones_like(m)
+    n_steps = max(1, (32 * W - 1).bit_length())  # covers runs up to 32*W
+    for _ in range(n_steps):
+        t = jnp.minimum(jnp.minimum(s, rem), 32)
+        shifted = _shr128(b, t)
+        b = [x & y for x, y in zip(b, shifted)]
+        rem = rem - t
+        s = s * 2
+    any_bit = jnp.zeros_like(m)
+    for x in b:
+        any_bit = any_bit | x
+    cont_ok = (any_bit != 0) & (m > 0) | (m == 0)
+
+    feas_ref[:] = jnp.where(contig, cont_ok, disp_ok).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_fit_pallas(
+    words: jax.Array,  # (N, W) uint32/int32 bitmap words (LSB-first)
+    mass: jax.Array,  # (N,) int32 demanded atoms
+    contig: jax.Array,  # (N,) bool / int32 contiguous-demand flag
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-node feasibility (int32 0/1) of each node's demand."""
+    N, W = words.shape
+    pad = (-N) % BLOCK_N
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+        mass = jnp.pad(mass, (0, pad))
+        contig = jnp.pad(contig.astype(jnp.int32), (0, pad))
+    Np = N + pad
+    grid = (Np // BLOCK_N,)
+
+    out = pl.pallas_call(
+        functools.partial(_fit_kernel, W=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, W), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.int32),
+        interpret=interpret,
+    )(words.astype(jnp.int32), mass.astype(jnp.int32), contig.astype(jnp.int32))
+    return out[:N]

@@ -1,0 +1,23 @@
+"""Public op: bitmap feasibility (Pallas kernel with CPU interpret fallback)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bitmap_fit.kernel import bitmap_fit_pallas
+from repro.kernels.bitmap_fit.ref import bitmap_fit_ref
+
+__all__ = ["bitmap_fit", "bitmap_fit_ref"]
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def bitmap_fit(words: jax.Array, mass: jax.Array, contig: jax.Array) -> jax.Array:
+    """Feasibility (0/1 int32) of each node's demand against its bitmap.
+
+    Runs the Pallas kernel natively on TPU; on CPU the kernel body executes
+    under ``interpret=True`` (identical semantics, Python-level execution).
+    """
+    return bitmap_fit_pallas(words, mass, contig, interpret=_on_cpu())

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the bitmap_fit kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap
+
+
+def bitmap_fit_ref(
+    words: jax.Array, mass: jax.Array, contig: jax.Array
+) -> jax.Array:
+    """Per-node feasibility via the unpacked bit-plane reference path."""
+    W = words.shape[-1]
+    bits = bitmap.unpack_bits(words.astype(jnp.uint32), W * 32)
+    free = jnp.sum(bits, axis=-1)
+    runs = bitmap.max_run(bits)
+    m = mass.astype(jnp.int32)
+    ok = jnp.where(contig.astype(bool), runs >= m, free >= m)
+    ok = ok | (m == 0)
+    return ok.astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.kernels.utility_topk.ops import utility_topk, utility_topk_ref
+
+__all__ = ["utility_topk", "utility_topk_ref"]

@@ -1,0 +1,18 @@
+"""Public op: fused utility scoring + candidate argmax."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.utility_topk.kernel import utility_topk_pallas
+from repro.kernels.utility_topk.ref import utility_topk_ref
+
+__all__ = ["utility_topk", "utility_topk_ref"]
+
+
+def utility_topk(s_pred, h_pred, eps, feasible, gamma):
+    """Best candidate per probe under the unified utility field."""
+    return utility_topk_pallas(
+        s_pred, h_pred, eps, feasible, gamma,
+        interpret=jax.default_backend() == "cpu",
+    )

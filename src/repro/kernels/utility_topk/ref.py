@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the utility_topk kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-3.0e38)
+
+
+def utility_topk_ref(
+    s_pred: jax.Array,
+    h_pred: jax.Array,
+    eps: jax.Array,
+    feasible: jax.Array,
+    gamma: jax.Array,
+):
+    score = (
+        jnp.log2(1.0 + jnp.maximum(s_pred.astype(jnp.float32), 0.0))
+        - jnp.asarray(gamma, jnp.float32)
+        * jnp.log2(1.0 + jnp.maximum(h_pred.astype(jnp.float32), 0.0))
+        + eps.astype(jnp.float32)
+    )
+    score = jnp.where(feasible.astype(bool), score, NEG)
+    return jnp.argmax(score, axis=-1).astype(jnp.int32), jnp.max(score, axis=-1)

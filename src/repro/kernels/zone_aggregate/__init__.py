@@ -1,0 +1,3 @@
+from repro.kernels.zone_aggregate.ops import zone_aggregate, zone_aggregate_ref
+
+__all__ = ["zone_aggregate", "zone_aggregate_ref"]

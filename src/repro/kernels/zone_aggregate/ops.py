@@ -1,0 +1,17 @@
+"""Public op: Zone-level aggregation of the Z-HAF reported state."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.zone_aggregate.kernel import zone_aggregate_pallas
+from repro.kernels.zone_aggregate.ref import zone_aggregate_ref
+
+__all__ = ["zone_aggregate", "zone_aggregate_ref"]
+
+
+def zone_aggregate(s_gather, h_gather, mask):
+    """Per-zone (mean slack, total heat) from densified node gathers."""
+    return zone_aggregate_pallas(
+        s_gather, h_gather, mask, interpret=jax.default_backend() == "cpu"
+    )

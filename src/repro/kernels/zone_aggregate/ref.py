@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the zone_aggregate kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zone_aggregate_ref(s_gather: jax.Array, h_gather: jax.Array, mask: jax.Array):
+    m = mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    zs = jnp.sum(s_gather.astype(jnp.float32) * m, axis=-1) / cnt
+    zh = jnp.sum(h_gather.astype(jnp.float32) * m, axis=-1)
+    return zs, zh

@@ -1,0 +1,5 @@
+"""Launchers: mesh builders, dry-run, train / serve drivers."""
+
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

@@ -1,0 +1,258 @@
+import os
+
+# MUST precede any jax-importing module: jax locks device count on first init.
+# REPRO_DRYRUN_DEVICES lets tests run the same path with a small device pool.
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_N_DEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, per device:
+  * memory_analysis()  — argument/output/temp/peak bytes (proves it fits),
+  * cost_analysis()    — HLO FLOPs and bytes accessed (roofline numerator),
+  * collective bytes   — parsed from the optimized HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute).
+
+Results are cached as JSON under ``results/dryrun`` so the roofline report
+(§Roofline) and EXPERIMENTS.md tables regenerate without recompiling.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import list_archs  # noqa: E402
+from repro.configs.shapes import SHAPES, SUBQUADRATIC_ARCHS  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.parallel import sharding  # noqa: E402
+from repro.train.optimizer import AdamState  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+[^=]*\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[1]
+        lhs = lhs.split(m.group(1))[0]  # shapes before the op name = result
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+        out.setdefault("count", 0)
+        out["count"] += 1
+    out["total_bytes"] = sum(v for k, v in out.items() if k.endswith(("gather", "reduce", "scatter", "all", "permute")))
+    return out
+
+
+def shardings_for(mesh, shape_kind: str, args, cfg=None):
+    """in_shardings pytree matching the step signature."""
+    from jax.sharding import PartitionSpec as PS
+
+    infer_zero3 = cfg.zero3_inference if cfg is not None else True
+
+    row_par = cfg.row_parallel if cfg is not None else False
+    kv_rep = cfg.kv_replicated if cfg is not None else False
+
+    if shape_kind == "train":
+        params_abs, opt_abs, batch_abs = args
+        pspecs = sharding.tree_param_specs(
+            mesh, params_abs, row_parallel=row_par, kv_replicated=kv_rep
+        )
+        ospecs = AdamState(
+            step=PS(),
+            mu=pspecs,
+            nu=pspecs,
+            err=None if opt_abs.err is None else pspecs,
+        )
+        bspecs = {}
+        for k, v in batch_abs.items():
+            if k in ("tokens", "labels"):
+                bspecs[k] = sharding.tokens_spec(mesh)
+            elif k == "pos3":
+                dp = sharding.dp_axes(mesh)
+                bspecs[k] = PS(None, dp if len(dp) > 1 else dp[0], None)
+            else:  # enc_embeds
+                dp = sharding.dp_axes(mesh)
+                bspecs[k] = PS(dp if len(dp) > 1 else dp[0], None, None)
+        return (pspecs, ospecs, bspecs)
+
+    params_abs = args[0]
+    pspecs = sharding.tree_param_specs(
+        mesh, params_abs, train=infer_zero3, row_parallel=row_par,
+        kv_replicated=kv_rep,
+    )
+    dp = sharding.dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else dp[0]
+
+    def extras_specs(ex):
+        out = {}
+        for k in ex:
+            if k == "pos3":
+                out[k] = PS(None, dpx, None)
+            else:
+                out[k] = PS(dpx, None, None)
+        return out
+
+    if shape_kind == "prefill":
+        _, tokens_abs, caches_abs, extras_abs = args
+        cspecs = sharding.tree_cache_specs(mesh, caches_abs)
+        return (pspecs, sharding.tokens_spec(mesh), cspecs, extras_specs(extras_abs))
+
+    _, tok_abs, idx_abs, caches_abs, extras_abs = args
+    cspecs = sharding.tree_cache_specs(mesh, caches_abs)
+    tok_spec = sharding.tokens_spec(mesh) if tok_abs.shape[0] > 1 else PS(None, None)
+    return (pspecs, tok_spec, PS(), cspecs, extras_specs(extras_abs))
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose: bool = True,
+    smoke: bool = False,
+    mesh=None,
+):
+    shape = SHAPES[shape_name]
+    if shape.subquadratic_only and arch not in SUBQUADRATIC_ARCHS:
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skip",
+            "reason": "long_500k requires sub-quadratic attention (DESIGN.md)",
+        }
+    t0 = time.time()
+    cfg, shp, step, args = steps_mod.build_cell(arch, shape_name, smoke=smoke)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    in_sh = shardings_for(mesh, shp.kind, args, cfg=cfg)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=jax.tree.map(
+                lambda s: jax.NamedSharding(mesh, s),
+                in_sh,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            ),
+        )
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = parse_collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "devices": int(mesh.size),
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'multi' if multi_pod else 'single'}-pod]")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis:", rec["cost"])
+        print("  collectives:", coll)
+        print(f"  compiled in {rec['compile_s']}s on {mesh.size} devices")
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool) -> Path:
+    pod = "multi" if multi_pod else "single"
+    return RESULTS / f"{arch}__{shape_name}__{pod}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    pods = []
+    if args.single_pod or not args.multi_pod:
+        pods.append(False)
+    if args.multi_pod or args.all and not args.single_pod:
+        pods.append(True)
+    pods = sorted(set(pods))
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    failures = 0
+    for mp in pods:
+        for arch in archs:
+            for shape_name in shapes:
+                out = cell_path(arch, shape_name, mp)
+                if out.exists() and not args.force:
+                    print(f"cached: {out.name}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mp)
+                except Exception as e:  # record failures; dry-run must go green
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch, "shape": shape_name, "multi_pod": mp,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures += 1
+                out.write_text(json.dumps(rec, indent=2))
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

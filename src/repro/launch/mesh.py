@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run forces 512 host
+platform devices before calling it; real deployments get real TPU devices.
+
+  single-pod:  (16, 16)      axes ("data", "model")      = 256 chips (one pod)
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / elastic re-meshing."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def tp_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,283 @@
+import os
+
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_N_DEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Roofline analysis from the compiled dry-run artifacts (§Roofline).
+
+Terms per (arch x shape) on the single-pod production mesh:
+
+    compute_s    = HLO_FLOPs/device   / 197 TFLOP/s (bf16, v5e chip)
+    memory_s     = HLO_bytes/device   / 819 GB/s HBM
+    collective_s = collective_bytes/device / 50 GB/s per ICI link
+                   (== global_collective_bytes / (chips x link_bw))
+
+Scan correction: XLA's cost_analysis counts a while-loop body ONCE, not x
+trip count (verified empirically in this repo). Every stack here scans over
+layer groups, so raw cell numbers undercount. We therefore compile two
+reduced-depth variants at FULL width — a 1-group body and a doubled
+(2-groups-in-one-body) variant — and extrapolate:
+
+    per_group = f(doubled) - f(single)
+    total     = f(single) + (n_groups - 1) * per_group
+
+(whisper gets a third variant to separate the encoder body). The same
+correction applies to bytes and to parsed collective bytes; memory_analysis
+peaks come from the REAL cell compile (no correction needed).
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get, list_archs  # noqa: E402
+from repro.configs.shapes import SHAPES, SUBQUADRATIC_ARCHS  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    RESULTS as DRYRUN_RESULTS,
+    parse_collective_bytes,
+    shardings_for,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+ROOF = Path(__file__).resolve().parents[3] / "results" / "roofline"
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+
+def _variant(cfg, mult: int):
+    """Full-width config whose whole depth fits in ONE scanned group."""
+    base = cfg.pattern if len(cfg.pattern) * cfg.n_groups == cfg.n_layers else cfg.pattern
+    kw = dict(pattern=tuple(base) * mult, n_layers=len(base) * mult)
+    if cfg.enc_layers > 0:
+        kw["enc_layers"] = 1
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape, mesh):
+    """Compile one variant; returns dict(flops, bytes, transcendentals, coll)."""
+    if shape.kind == "train":
+        step = steps_mod.make_train_step(cfg)
+    elif shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg)
+    else:
+        step = steps_mod.make_serve_step(cfg)
+    args = steps_mod.abstract_inputs(cfg, shape)
+    in_sh = shardings_for(mesh, shape.kind, args, cfg=cfg)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=jax.tree.map(
+                lambda s: jax.NamedSharding(mesh, s),
+                in_sh,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            ),
+        )
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops") or 0.0),
+        "bytes": float(cost.get("bytes accessed") or 0.0),
+        "coll": float(coll.get("total_bytes") or 0.0),
+        "coll_by_kind": {
+            k: v for k, v in coll.items() if k not in ("count", "total_bytes")
+        },
+    }
+
+
+def _extrapolate(cfg, shape, mesh):
+    """Scan-corrected totals via the 1-group / 2-group differencing."""
+    pat = cfg.pattern
+    groups = cfg.n_layers // len(pat)
+    f1 = _measure(_variant(cfg, 1), shape, mesh)
+    if groups == 1 and cfg.enc_layers <= 1:
+        # body already fully unrolled in one group: f1 is exact
+        out = {k: f1[k] for k in ("flops", "bytes", "coll")}
+        out["coll_by_kind"] = f1["coll_by_kind"]
+        return out
+    if groups == 1:
+        f2 = f1  # decoder exact; only the encoder needs extrapolation
+    else:
+        f2 = _measure(_variant(cfg, 2), shape, mesh)
+
+    def combine(k):
+        body = max(f2[k] - f1[k], 0.0)
+        return f1[k] + (groups - 1) * body
+
+    out = {k: combine(k) for k in ("flops", "bytes", "coll")}
+
+    if cfg.enc_layers > 1:  # whisper: separate encoder body
+        f3 = _measure(
+            dataclasses.replace(_variant(cfg, 1), enc_layers=2), shape, mesh
+        )
+        for k in ("flops", "bytes", "coll"):
+            enc_body = max(f3[k] - f1[k], 0.0)
+            out[k] += (cfg.enc_layers - 1) * enc_body
+    out["coll_by_kind"] = f2["coll_by_kind"]
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference), N_active for MoE."""
+    params = steps_mod.abstract_params(cfg)
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [str(getattr(k, "key", "")) for k in path]
+        n = int(np.prod(leaf.shape))
+        if "embed" in keys:  # gather, not matmul
+            continue
+        total += n
+        if cfg.moe is not None and keys[-1] in ("w_gate", "w_up", "w_down") and len(leaf.shape) == 4:
+            expert += n
+    n_active = total - expert
+    if cfg.moe is not None and expert:
+        n_active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def analyze_cell(
+    arch: str, shape_name: str, mesh=None, dryrun_rec=None, overrides=None
+) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.subquadratic_only and arch not in SUBQUADRATIC_ARCHS:
+        return {"arch": arch, "shape": shape_name, "status": "skip"}
+    cfg = get(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=False)
+    chips = int(mesh.size)
+    t0 = time.time()
+    ex = _extrapolate(cfg, shape, mesh)
+
+    compute_s = ex["flops"] / PEAK_FLOPS
+    memory_s = ex["bytes"] / HBM_BW
+    coll_s = ex["coll"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / chips
+    useful = mf_dev / max(ex["flops"], 1.0)
+    bound_s = max(terms.values())
+    # roofline fraction: useful model work over what the bottleneck term costs
+    ideal_s = mf_dev / PEAK_FLOPS
+    frac = ideal_s / max(bound_s, 1e-30)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "chips": chips,
+        "flops_per_device": ex["flops"],
+        "bytes_per_device": ex["bytes"],
+        "coll_bytes_per_device": ex["coll"],
+        **{k: terms[k] for k in terms},
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "memory": (dryrun_rec or {}).get("memory"),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def suggestion(rec: dict) -> str:
+    d = rec.get("dominant")
+    if d == "compute_s":
+        if rec["useful_flops_ratio"] < 0.5:
+            return "compute-bound with low useful ratio: cut remat recompute / attention waste"
+        return "compute-bound near model FLOPs: increase per-chip batch or accept"
+    if d == "memory_s":
+        return "HBM-bound: fuse/bf16-cast intermediates, shrink attention working set, better layouts"
+    return "collective-bound: reshard to cut all-gathers, overlap collectives with compute"
+
+
+BOOL_OPTS = ("sharded_xent", "cast_params_once")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default=None, help="comma-sep ArchConfig overrides"
+                    " (bool flags or key=value, e.g. sharded_xent,remat=none)")
+    ap.add_argument("--tag", default=None, help="result-file suffix for variants")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    _DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+    overrides = {}
+    if args.opt:
+        for item in args.opt.split(","):
+            if "=" in item:
+                k, v = item.split("=", 1)
+                if v.lower() in ("true", "false"):
+                    v = v.lower() == "true"
+                elif v in _DTYPES:
+                    v = _DTYPES[v]
+                overrides[k] = v
+            else:
+                overrides[item] = True
+
+    ROOF.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape_name in shapes:
+            suffix = f"__{args.tag}" if args.tag else ""
+            out = ROOF / f"{arch}__{shape_name}{suffix}.json"
+            if out.exists() and not args.force:
+                print(f"cached: {out.name}")
+                continue
+            dr = DRYRUN_RESULTS / f"{arch}__{shape_name}__single.json"
+            dryrun_rec = json.loads(dr.read_text()) if dr.exists() else None
+            try:
+                rec = analyze_cell(arch, shape_name, mesh, dryrun_rec, overrides)
+                if rec["status"] == "ok":
+                    rec["suggestion"] = suggestion(rec)
+            except Exception as e:
+                import traceback
+
+                traceback.print_exc()
+                rec = {
+                    "arch": arch, "shape": shape_name, "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                }
+            out.write_text(json.dumps(rec, indent=2))
+            if rec["status"] == "ok":
+                print(
+                    f"{arch} x {shape_name}: dominant={rec['dominant']} "
+                    f"[c={rec['compute_s']:.4f}s m={rec['memory_s']:.4f}s "
+                    f"x={rec['collective_s']:.4f}s] "
+                    f"useful={rec['useful_flops_ratio']:.2f} "
+                    f"roofline={rec['roofline_fraction']:.3f}"
+                )
+            else:
+                print(f"{arch} x {shape_name}: {rec['status']}")
+
+
+if __name__ == "__main__":
+    main()

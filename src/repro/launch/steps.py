@@ -1,0 +1,146 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``abstract_inputs(arch, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no device allocation) for everything a cell's step
+consumes — params, optimizer state, batches, KV caches — which is exactly
+what ``jit(...).lower()`` needs for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get, get_smoke
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.train import optimizer as opt
+
+DEFAULT_OPT = opt.OptConfig()
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.OptConfig = DEFAULT_OPT):
+    def _cast_once(p):
+        if not cfg.cast_params_once:
+            return p
+        return jax.tree.map(
+            lambda x: x.astype(cfg.compute_dtype)
+            if (hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 2)
+            else x,
+            p,
+        )
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(cfg, _cast_once(p), batch), has_aux=True
+        )(params)
+        new_params, new_state, stats = opt.adamw_update(ocfg, params, grads, opt_state)
+        metrics = {"loss": loss, **stats}
+        if "moe_dropped_slots" in aux:
+            metrics["moe_dropped_slots"] = aux["moe_dropped_slots"]
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, caches, extras):
+        return lm.prefill(
+            cfg, params, tokens, caches,
+            extras.get("pos3"), extras.get("enc_embeds"),
+        )
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, index, caches, extras):
+        return lm.decode_step(
+            cfg, params, token, index, caches,
+            extras.get("pos3"), extras.get("enc_embeds"),
+        )
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, ocfg: opt.OptConfig = DEFAULT_OPT):
+    p = abstract_params(cfg)
+    return jax.eval_shape(lambda: opt.init_opt_state(ocfg, p))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extras(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    ex: Dict[str, Any] = {}
+    if cfg.enc_layers > 0:
+        ex["enc_embeds"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.mrope_sections is not None:
+        ex["pos3"] = _sds((3, B, S), jnp.int32)
+    return ex
+
+
+def abstract_inputs(
+    cfg: ArchConfig, shape: ShapeSpec, ocfg: opt.OptConfig = DEFAULT_OPT
+) -> Tuple[Any, ...]:
+    """Abstract step arguments for this cell (matching the step builder)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            **_extras(cfg, B, S),
+        }
+        return (abstract_params(cfg), abstract_opt_state(cfg, ocfg), batch)
+    if shape.kind == "prefill":
+        caches = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+        ex = _extras(cfg, B, S)
+        pos3 = ex.pop("pos3", None)
+        extras = dict(ex)
+        if pos3 is not None:
+            extras["pos3"] = pos3
+        return (abstract_params(cfg), _sds((B, S), jnp.int32), caches, extras)
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+        ex = _extras(cfg, B, 1)
+        extras = dict(ex)
+        return (
+            abstract_params(cfg),
+            _sds((B, 1), jnp.int32),
+            _sds((), jnp.int32),
+            caches,
+            extras,
+        )
+    raise ValueError(shape.kind)
+
+
+def build_cell(arch: str, shape_name: str, smoke: bool = False):
+    """Returns (cfg, shape, step_fn, abstract_args)."""
+    cfg = get_smoke(arch) if smoke else get(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        step = make_train_step(cfg)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+    else:
+        step = make_serve_step(cfg)
+    return cfg, shape, step, abstract_inputs(cfg, shape)

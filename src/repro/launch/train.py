@@ -1,0 +1,62 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Selects any of the 10 assigned architectures (full or smoke-reduced), builds
+the mesh, data pipeline and fault-tolerant trainer, and runs. On this CPU
+container use ``--smoke`` (reduced config); on a real pod the same flags
+drive the full configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None, help="e.g. 16x16 (default: all devices x1)")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get, get_smoke
+    from repro.launch.mesh import make_mesh
+    from repro.train import data as data_mod
+    from repro.train import optimizer as opt
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+    else:
+        shape = (len(jax.devices()), 1)
+    mesh = make_mesh(shape, ("data", "model"))
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        opt=opt.OptConfig(
+            lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+            total_steps=args.steps, compress_grads=args.compress_grads,
+        ),
+    )
+    pipeline = data_mod.make_pipeline(cfg.vocab, args.batch, args.seq, seed=0)
+    trainer = Trainer(cfg, tcfg, mesh, pipeline)
+    out = trainer.run()
+    print(
+        f"arch={cfg.name} steps={out['steps']} "
+        f"first_loss={out['losses'][0]:.4f} final_loss={out['final_loss']:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

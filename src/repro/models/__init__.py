@@ -1,0 +1,17 @@
+"""Composable model stack for the 10 assigned architectures."""
+
+from repro.models import attention, blocks, lm, mlp, moe, rglru, ssd
+from repro.models.common import ArchConfig, MoEConfig, SSMConfig
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "attention",
+    "blocks",
+    "lm",
+    "mlp",
+    "moe",
+    "rglru",
+    "ssd",
+]

@@ -1,0 +1,327 @@
+"""GQA attention with the assigned archs' full option surface.
+
+Options: grouped KV heads, QKV bias (qwen2.5 / qwen1.5 / qwen2-vl), qk-norm
+(qwen3), attention logit softcapping (gemma2), sliding-window "local" layers
+(gemma2 / recurrentgemma), M-RoPE (qwen2-vl), cross-attention (whisper), and a
+KV cache for decode.
+
+Long sequences use a blockwise (flash-style) streaming softmax over KV chunks:
+the (S, S) score matrix never materializes, which is what lets the 32k prefill
+shapes fit the dry-run memory budget.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+BLOCK_Q = 512
+BLOCK_KV = 1024
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, H_kv, D)
+    v: jax.Array  # (B, S_cache, H_kv, D)
+    pos: jax.Array  # (S_cache,) absolute positions of cached entries
+
+    @staticmethod
+    def zeros(cfg: ArchConfig, batch: int, s_cache: int) -> "KVCache":
+        shp = (batch, s_cache, cfg.n_kv_heads, cfg.d_head)
+        return KVCache(
+            jnp.zeros(shp, cfg.compute_dtype),
+            jnp.zeros(shp, cfg.compute_dtype),
+            jnp.arange(s_cache, dtype=jnp.int32),
+        )
+
+
+def init_attn_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p: Params = {
+        "wq": cm.dense_init(ks[0], d, h * dh, dt),
+        "wk": cm.dense_init(ks[1], d, hk * dh, dt),
+        "wv": cm.dense_init(ks[2], d, hk * dh, dt),
+        "wo": cm.dense_init(ks[3], h * dh, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((hk * dh,), dt)
+        p["bv"] = jnp.zeros((hk * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dt)
+        p["k_norm"] = jnp.zeros((dh,), dt)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jax.Array, xk: Optional[jax.Array] = None):
+    """Returns q (B,S,H,D), k/v (B,Sk,Hk,D). ``xk`` is the cross-attn source."""
+    B, S, _ = x.shape
+    src = x if xk is None else xk
+    Sk = src.shape[1]
+    q = x @ p["wq"].astype(cfg.compute_dtype)
+    k = src @ p["wk"].astype(cfg.compute_dtype)
+    v = src @ p["wv"].astype(cfg.compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cfg.compute_dtype)
+        k = k + p["bk"].astype(cfg.compute_dtype)
+        v = v + p["bv"].astype(cfg.compute_dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = cm.rms_norm(p["q_norm"], q)
+        k = cm.rms_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    hk = k.shape[-2]
+    if hk == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hk, axis=-2)
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: Optional[int]
+) -> jax.Array:
+    """(Sq, Sk) additive mask."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _grouped_dense_attention(cfg, q, k, v, q_pos, k_pos, causal, window):
+    """GQA without repeat_kv: q grouped as (B, Sq, Hk, G, D); the KV tensors
+    keep their native head count (and their native sharding — crucial for
+    decode, where repeat_kv would reshard the whole cache)."""
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    scale = 1.0 / (D**0.5)
+    qg = (q * scale).reshape(B, Sq, Hk, G, D)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = cm.softcap(logits, cfg.attn_softcap)
+    logits = logits + _mask_bias(q_pos, k_pos, causal, window)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def _grouped_streaming_attention(cfg, q, k, v, q_pos, k_pos, causal, window):
+    """Blockwise online-softmax attention with native (ungrouped) KV heads."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hk = k.shape[2]
+    G = H // Hk
+    scale = 1.0 / (D**0.5)
+    qg = (q * scale).reshape(B, Sq, Hk, G, D).transpose(0, 2, 3, 1, 4)
+    # (B, Hk, G, Sq, D)
+    nkv = -(-Sk // BLOCK_KV)
+    pad_k = nkv * BLOCK_KV - Sk
+    kk, vv, kp = k, v, k_pos
+    if pad_k:
+        kk = jnp.pad(kk, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kp = jnp.pad(kp, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+    k_b = kk.reshape(B, nkv, BLOCK_KV, Hk, D)
+    v_b = vv.reshape(B, nkv, BLOCK_KV, Hk, D)
+    kp_b = kp.reshape(nkv, BLOCK_KV)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        kb, vb, kpb = blk  # (B, BLOCK, Hk, D), (BLOCK,)
+        logits = jnp.einsum(
+            "bhgqd,bkhd->bhgqk", qg, kb, preferred_element_type=jnp.float32
+        )
+        logits = cm.softcap(logits, cfg.attn_softcap)
+        logits = logits + _mask_bias(q_pos, kpb, causal, window)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hk, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hk, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body,
+        (acc0, m0, l0),
+        (jnp.moveaxis(k_b, 1, 0), jnp.moveaxis(v_b, 1, 0), kp_b),
+    )
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    # (B, Hk, G, Sq, D) -> (B, Sq, H*D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H * D)
+
+
+def dot_attention(
+    cfg: ArchConfig,
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, Hk, D)
+    v: jax.Array,
+    q_pos: jax.Array,  # (Sq,)
+    k_pos: jax.Array,  # (Sk,)
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Blockwise streaming-softmax attention (never materializes Sq x Sk)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+
+    if getattr(cfg, "gqa_grouped", False) and k.shape[2] != H:
+        if Sq * Sk <= BLOCK_Q * BLOCK_KV * 4:
+            return _grouped_dense_attention(
+                cfg, q, k, v, q_pos, k_pos, causal, window
+            )
+        return _grouped_streaming_attention(
+            cfg, q, k, v, q_pos, k_pos, causal, window
+        )
+
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = 1.0 / (D**0.5)
+    q = (q * scale).swapaxes(1, 2)  # (B, H, Sq, D)
+    k = k.swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+
+    if Sq * Sk <= BLOCK_Q * BLOCK_KV * 4:
+        # small path: one dense block
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+        )
+        logits = cm.softcap(logits, cfg.attn_softcap)
+        logits = logits + _mask_bias(q_pos, k_pos, causal, window)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+        return out.swapaxes(1, 2).reshape(B, Sq, H * D)
+
+    # streaming path: scan over KV blocks with online softmax
+    nkv = -(-Sk // BLOCK_KV)
+    pad_k = nkv * BLOCK_KV - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+    k_b = k.reshape(B, H, nkv, BLOCK_KV, D)
+    v_b = v.reshape(B, H, nkv, BLOCK_KV, D)
+    kp_b = k_pos.reshape(nkv, BLOCK_KV)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        kb, vb, kpb = blk
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", q, kb, preferred_element_type=jnp.float32
+        )
+        logits = cm.softcap(logits, cfg.attn_softcap)
+        logits = logits + _mask_bias(q_pos, kpb, causal, window)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body,
+        (acc0, m0, l0),
+        (jnp.moveaxis(k_b, 2, 0), jnp.moveaxis(v_b, 2, 0), kp_b),
+    )
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.swapaxes(1, 2).reshape(B, Sq, H * D)
+
+
+def attend(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    pos: jax.Array,  # (B, S) int positions (or pos3 (3,B,S) for mrope)
+    kind: str,  # "global" | "local"
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_at: Optional[jax.Array] = None,  # scalar write offset for decode
+    xk: Optional[jax.Array] = None,  # cross-attention source (pre-projected x)
+    rope: bool = True,
+):
+    """Full attention op. Returns (out (B,S,d_model), updated cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, xk)
+
+    if rope and xk is None:
+        if cfg.mrope_sections is not None:
+            q = cm.apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+            k = cm.apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+            q_pos1 = pos[0, 0]  # temporal track for masking
+        else:
+            q = cm.apply_rope(q, pos, cfg.rope_theta)
+            k = cm.apply_rope(k, pos, cfg.rope_theta)
+            q_pos1 = pos[0]
+    else:
+        q_pos1 = pos[0] if pos.ndim == 2 else pos[0, 0]
+
+    window = cfg.window if kind == "local" else None
+
+    if cache is not None:
+        S_cache = cache.k.shape[1]
+        at = jnp.asarray(cache_at, jnp.int32)
+        if S > S_cache:
+            # prefill longer than a windowed ring: attend directly over the
+            # in-sequence K/V (window mask bounds the reach), then store only
+            # the last S_cache entries, slot-aligned so slot == pos % S_cache.
+            kp = pos[0] if pos.ndim == 2 else pos[0, 0]
+            out = dot_attention(cfg, q, k, v, q_pos1, kp, causal, window)
+            tail_k = k[:, -S_cache:].astype(cache.k.dtype)
+            tail_v = v[:, -S_cache:].astype(cache.v.dtype)
+            tail_pos = (at + S - S_cache) + jnp.arange(S_cache, dtype=jnp.int32)
+            shift = (at + S - S_cache) % S_cache
+            new_cache = KVCache(
+                jnp.roll(tail_k, shift, axis=1),
+                jnp.roll(tail_v, shift, axis=1),
+                jnp.roll(tail_pos, shift, axis=0),
+            )
+        else:
+            # decode / short prefill: write at cache_at (mod ring size), then
+            # attend over the whole cache; positional masking does the rest.
+            write_at = at % S_cache
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, write_at, 0, 0)
+            )
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, write_at, 0, 0)
+            )
+            pos_new = jax.lax.dynamic_update_slice(
+                cache.pos, at + jnp.arange(S, dtype=jnp.int32), (write_at,)
+            )
+            out = dot_attention(
+                cfg, q, k_all, v_all, q_pos1, pos_new, causal, window
+            )
+            new_cache = KVCache(k_all, v_all, pos_new)
+    else:
+        k_pos = pos[0] if pos.ndim == 2 else pos[0, 0]
+        if xk is not None:
+            k_pos = jnp.arange(xk.shape[1], dtype=jnp.int32)
+        out = dot_attention(cfg, q, k, v, q_pos1, k_pos, causal, window)
+        new_cache = None
+
+    out = out @ p["wo"].astype(cfg.compute_dtype)
+    return out, new_cache

@@ -1,0 +1,205 @@
+"""Decoder block assembly and the scanned group stack.
+
+A *group* is one repetition of the arch's layer pattern (e.g. gemma2 =
+("local", "global"), recurrentgemma = ("recurrent", "recurrent", "local"),
+mamba2 = ("ssd",)). Parameters and caches carry a leading ``n_groups`` axis
+and the stack is one `lax.scan` over groups — heterogeneous patterns compile
+to a single scanned body (small HLO, fast compile, bounded live memory).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, rglru, ssd
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+
+# ---------------------------------------------------------------------------
+# per-position (within group) param/cache builders
+# ---------------------------------------------------------------------------
+
+
+def init_block_params(key, cfg: ArchConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if kind in ("global", "local"):
+        p["mixer"] = attention.init_attn_params(ks[0], cfg)
+    elif kind == "recurrent":
+        p["mixer"] = rglru.init_rglru_params(ks[0], cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssd.init_ssd_params(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+
+    if cfg.cross_attention and kind in ("global", "local"):
+        p["ln_x"] = jnp.zeros((cfg.d_model,), dt)
+        p["xattn"] = attention.init_attn_params(ks[3], cfg)
+
+    if cfg.moe is not None:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = moe.init_moe_params(ks[1], cfg)
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = mlp.init_mlp_params(ks[1], cfg)
+    if getattr(cfg, "post_norm", False):
+        p["ln1b"] = jnp.zeros((cfg.d_model,), dt)
+        if "ln2" in p:
+            p["ln2b"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def init_block_cache(
+    cfg: ArchConfig, kind: str, batch: int, s_cache: int
+) -> Any:
+    if kind in ("global", "local"):
+        size = s_cache if kind == "global" else min(s_cache, cfg.window or s_cache)
+        return attention.KVCache.zeros(cfg, batch, size)
+    if kind == "recurrent":
+        return rglru.init_rglru_state(cfg, batch)
+    if kind == "ssd":
+        return ssd.init_ssd_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block(
+    p: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jax.Array,
+    pos: jax.Array,
+    cache: Any = None,
+    cache_at: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+    aux: Optional[dict] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Any]:
+    post_norm = getattr(cfg, "post_norm", False)
+
+    h = cm.rms_norm(p["ln1"], x)
+    if kind in ("global", "local"):
+        out, new_cache = attention.attend(
+            p["mixer"], cfg, h, pos, kind, causal=causal, cache=cache,
+            cache_at=cache_at,
+        )
+    elif kind == "recurrent":
+        out, new_cache = rglru.rglru_block(p["mixer"], cfg, h, cache)
+    elif kind == "ssd":
+        out, new_cache = ssd.ssd_block(p["mixer"], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    if post_norm:
+        out = cm.rms_norm(p["ln1b"], out)
+    x = x + out
+
+    if cfg.cross_attention and enc_out is not None and kind in ("global", "local"):
+        hx = cm.rms_norm(p["ln_x"], x)
+        xo, _ = attention.attend(
+            p["xattn"], cfg, hx, pos, "global", causal=False, xk=enc_out,
+            rope=False,
+        )
+        x = x + xo
+
+    if "ffn" in p:
+        h2 = cm.rms_norm(p["ln2"], x)
+        if cfg.moe is not None:
+            f, moe_aux = moe.moe_ffn(p["ffn"], cfg, h2)
+            if aux is not None:
+                aux.update(moe_aux)
+        else:
+            f = mlp.mlp(p["ffn"], cfg, h2)
+        if post_norm:
+            f = cm.rms_norm(p["ln2b"], f)
+        x = x + f
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# group = one repetition of the pattern; stack = scan over groups
+# ---------------------------------------------------------------------------
+
+
+def init_group_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"b{i}": init_block_params(ks[i], cfg, kind)
+        for i, kind in enumerate(cfg.pattern)
+    }
+
+
+def init_stacked_params(key, cfg: ArchConfig) -> Params:
+    """Params with a leading n_groups axis on every leaf (for lax.scan)."""
+    keys = jax.random.split(key, cfg.n_groups)
+    per_group = [init_group_params(k, cfg) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+
+
+def init_stacked_cache(cfg: ArchConfig, batch: int, s_cache: int):
+    one = {
+        f"b{i}": init_block_cache(cfg, kind, batch, s_cache)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups, *x.shape)), one
+    )
+
+
+def apply_stack(
+    params_stacked: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    pos: jax.Array,
+    caches=None,
+    cache_at: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """Scan the grouped decoder stack. Returns (x, new_caches, aux)."""
+    aux_acc = {"moe_dropped_slots": jnp.zeros((), jnp.int32)}
+
+    def group_apply(xc, auxc, gp, gc):
+        new_gc = {} if gc is not None else None
+        aux_local: dict = {}
+        for i, kind in enumerate(cfg.pattern):
+            blk_cache = gc[f"b{i}"] if gc is not None else None
+            xc, upd = apply_block(
+                gp[f"b{i}"], cfg, kind, xc, pos,
+                cache=blk_cache, cache_at=cache_at, enc_out=enc_out,
+                aux=aux_local, causal=causal,
+            )
+            if gc is not None:
+                new_gc[f"b{i}"] = upd
+        if "moe_dropped_slots" in aux_local:
+            auxc = {
+                "moe_dropped_slots": auxc["moe_dropped_slots"]
+                + aux_local["moe_dropped_slots"]
+            }
+        return xc, auxc, new_gc
+
+    if caches is None:
+
+        def body(carry, gp):
+            xc, auxc = carry
+            xc, auxc, _ = group_apply(xc, auxc, gp, None)
+            return (xc, auxc), None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux_acc), params_stacked)
+        return x, None, aux
+
+    def body(carry, scanned):
+        xc, auxc = carry
+        gp, gc = scanned
+        xc, auxc, new_gc = group_apply(xc, auxc, gp, gc)
+        return (xc, auxc), new_gc
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux_acc), (params_stacked, caches))
+    return x, new_caches, aux

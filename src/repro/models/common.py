@@ -1,0 +1,213 @@
+"""Shared model substrate: configs, norms, RoPE/M-RoPE, initializers.
+
+Pure-functional JAX (params are pytrees of arrays); no framework dependency.
+All stacks scan over layer *groups* (a group = the arch's repeating layer
+pattern), so heterogeneous patterns (gemma2 local/global alternation,
+recurrentgemma 2:1 recurrent:attention) compile as a single scanned body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router: str = "topk"  # "topk" (drop overflow) | "laminar" (bounded bounce)
+    laminar_bounces: int = 1  # bounded re-addressing rounds for overflow tokens
+    laminar_gamma: float = 0.05  # heat-repulsion strength on router logits
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None  # sliding window for "local" layers
+    rope_theta: float = 1e6
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+
+    # layer pattern: one group = this sequence of block kinds, repeated
+    # kinds: "global", "local", "recurrent", "ssd", "enc" (handled separately)
+    pattern: Tuple[str, ...] = ("global",)
+
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    post_norm: bool = False  # gemma2 pre+post norm sandwich
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    d_rnn: Optional[int] = None  # recurrentgemma RG-LRU width
+
+    # encoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0  # precomputed frame embeddings (frontend stub)
+    cross_attention: bool = False
+
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "block"  # none | block
+
+    # --- performance knobs (§Perf hillclimb; defaults = naive baseline) ----
+    # shard-aware cross-entropy: never materializes/gathers full log-softmax;
+    # logsumexp + one-hot contraction reduce over the vocab-sharded axis.
+    sharded_xent: bool = False
+    # cast params to compute dtype ONCE at step entry so weight all-gathers
+    # move bf16 (half the collective bytes of f32 gathers under ZeRO-3).
+    cast_params_once: bool = False
+    # keep ZeRO-3 (data-axis) weight sharding for inference steps too; the
+    # baseline (True) re-gathers weights every prefill/decode step, the
+    # optimized setting (False) holds weights TP-sharded + DP-replicated.
+    zero3_inference: bool = True
+    # MoE dispatch-position ranking via log-depth associative scan instead of
+    # jnp.cumsum (XLA lowers big cumsums to reduce-window on some backends —
+    # quadratic in HLO cost terms; the scan is the TPU-honest formulation).
+    moe_assoc_scan: bool = False
+    # Megatron-correct tensor parallelism: down/out projections get
+    # row-parallel specs (contracting dim on "model"), so the hidden
+    # activations flow shard-aligned into them and the only TP collective is
+    # one (tokens x d_model) partial-sum all-reduce per projection — instead
+    # of GSPMD all-gathering (tokens x d_ff) hiddens in f32.
+    row_parallel: bool = False
+    # GQA attention via grouped einsum (q reshaped to (..., H_kv, G, D))
+    # instead of materializing repeat_kv — repeat forces GSPMD to reshard /
+    # replicate the whole KV cache every decode step.
+    gqa_grouped: bool = False
+    # replicate K/V projections across the model axis (Megatron GQA recipe
+    # when n_kv_heads < TP degree): tiny duplicated KV-proj FLOPs buy fully
+    # shard-aligned grouped attention.
+    kv_replicated: bool = False
+    # explicit EP sharding constraints on the MoE dispatch buffers
+    # ((E, C, d) pinned to experts-on-model) so the expert matmuls and their
+    # activations never leave the expert shard.
+    moe_ep_constraint: bool = False
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by "
+            f"pattern {self.pattern}"
+        )
+        return self.n_layers // len(self.pattern)
+
+    def scaled(self, **kw) -> "ArchConfig":
+        """Reduced-config clone for smoke tests."""
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); pos: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections: Tuple[int, int, int]
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): pos3 (3, ..., S) gives (t, h, w) positions;
+    frequency channels are partitioned into ``sections`` (sum = D/2)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # static
+    # per-channel position source
+    pos = jnp.take(pos3, sec_id, axis=0)  # (half, ..., S) -> move axis
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., S, half)
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

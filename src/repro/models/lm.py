@@ -1,0 +1,213 @@
+"""Top-level models: decoder-only LM, encoder-decoder (whisper), VLM backbone.
+
+Public entry points (all pure functions of (cfg, params, ...)):
+
+  * ``init_params``            — full parameter pytree
+  * ``forward``                — training forward -> logits (B, S, V)
+  * ``loss_fn``                — next-token cross-entropy
+  * ``init_cache`` / ``prefill`` / ``decode_step``
+
+Modality frontends are stubs per the assignment: whisper takes precomputed
+frame embeddings (B, enc_seq, d_model); qwen2-vl takes token ids plus M-RoPE
+position ids (3, B, S) covering the merged text+vision stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": cm.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "stack": blocks.init_stacked_params(ks[1], cfg),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(ks[2], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    if cfg.enc_layers > 0:
+        enc_cfg = _encoder_cfg(cfg)
+        p["enc_stack"] = blocks.init_stacked_params(ks[3], enc_cfg)
+        p["enc_ln_f"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        p["enc_pos"] = (
+            jax.random.normal(ks[4], (cfg.enc_seq, cfg.d_model)) * 0.01
+        ).astype(cfg.param_dtype)
+    return p
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        n_layers=cfg.enc_layers,
+        pattern=("global",),
+        cross_attention=False,
+        moe=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared trunk
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ArchConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    x = p["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.tie_embeddings:  # gemma-style scaled embeddings
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.compute_dtype)
+    return x
+
+
+def _head(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    x = cm.rms_norm(p["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].astype(cfg.compute_dtype).T
+    else:
+        logits = x @ p["head"].astype(cfg.compute_dtype)
+    logits = cm.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits
+
+
+def _encode(cfg: ArchConfig, p: Params, enc_embeds: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    enc_cfg = _encoder_cfg(cfg)
+    x = enc_embeds.astype(cfg.compute_dtype) + p["enc_pos"][None].astype(
+        cfg.compute_dtype
+    )
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+    x, _, _ = blocks.apply_stack(
+        p["enc_stack"], enc_cfg, x, pos, causal=False
+    )
+    return cm.rms_norm(p["enc_ln_f"], x)
+
+
+def _positions(cfg: ArchConfig, batch: int, seq: int, pos3=None):
+    if cfg.mrope_sections is not None:
+        if pos3 is None:
+            base = jnp.arange(seq, dtype=jnp.int32)[None]
+            pos3 = jnp.broadcast_to(base[None], (3, batch, seq))
+        return pos3
+    return jnp.broadcast_to(
+        jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq)
+    )
+
+
+# ---------------------------------------------------------------------------
+# training forward + loss
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ArchConfig,
+    p: Params,
+    tokens: jax.Array,  # (B, S)
+    pos3: Optional[jax.Array] = None,  # (3, B, S) for M-RoPE archs
+    enc_embeds: Optional[jax.Array] = None,  # (B, enc_seq, d) whisper stub
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S = tokens.shape
+    x = _embed(cfg, p, tokens)
+    pos = _positions(cfg, B, S, pos3)
+    enc_out = _encode(cfg, p, enc_embeds) if cfg.enc_layers > 0 else None
+    x, _, aux = blocks.apply_stack(p["stack"], cfg, x, pos, enc_out=enc_out)
+    return _head(cfg, p, x), aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    p: Params,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    logits, aux = forward(
+        cfg, p, batch["tokens"], batch.get("pos3"), batch.get("enc_embeds")
+    )
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.sharded_xent:
+        # Vocab-shard-aware cross-entropy: both reductions contract over the
+        # (possibly model-sharded) vocab axis, so GSPMD lowers them to partial
+        # reductions + a tiny all-reduce instead of gathering (B, S, V) logits.
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(
+            jnp.maximum(labels, 0), cfg.vocab, dtype=logits.dtype
+        )
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        ll = label_logit - lse
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.sum(ll * mask) / denom
+    aux["loss"] = loss
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# inference: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int):
+    return blocks.init_stacked_cache(cfg, batch, s_cache)
+
+
+def prefill(
+    cfg: ArchConfig,
+    p: Params,
+    tokens: jax.Array,  # (B, S)
+    caches,
+    pos3: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+):
+    """Populate caches for the prompt; returns (last-token logits, caches)."""
+    B, S = tokens.shape
+    x = _embed(cfg, p, tokens)
+    pos = _positions(cfg, B, S, pos3)
+    enc_out = _encode(cfg, p, enc_embeds) if cfg.enc_layers > 0 else None
+    x, caches, _ = blocks.apply_stack(
+        p["stack"], cfg, x, pos, caches=caches,
+        cache_at=jnp.zeros((), jnp.int32), enc_out=enc_out,
+    )
+    return _head(cfg, p, x[:, -1:, :]), caches
+
+
+def decode_step(
+    cfg: ArchConfig,
+    p: Params,
+    token: jax.Array,  # (B, 1)
+    index: jax.Array,  # () current absolute position
+    caches,
+    pos3: Optional[jax.Array] = None,  # (3, B, 1)
+    enc_embeds: Optional[jax.Array] = None,
+):
+    """One serving step: append one token, return (logits (B,1,V), caches)."""
+    B = token.shape[0]
+    x = _embed(cfg, p, token)
+    if cfg.mrope_sections is not None:
+        pos = (
+            pos3
+            if pos3 is not None
+            else jnp.broadcast_to(index[None, None, None], (3, B, 1)).astype(jnp.int32)
+        )
+    else:
+        pos = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    enc_out = _encode(cfg, p, enc_embeds) if cfg.enc_layers > 0 else None
+    x, caches, _ = blocks.apply_stack(
+        p["stack"], cfg, x, pos, caches=caches, cache_at=index, enc_out=enc_out
+    )
+    return _head(cfg, p, x), caches

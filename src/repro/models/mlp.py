@@ -1,0 +1,39 @@
+"""Feed-forward layers: SwiGLU / GeGLU / plain GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+
+def init_mlp_params(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": cm.dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "w_up": cm.dense_init(ks[1], cfg.d_model, d_ff, dt),
+            "w_down": cm.dense_init(ks[2], d_ff, cfg.d_model, dt),
+        }
+    return {
+        "w_up": cm.dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "b_up": jnp.zeros((d_ff,), dt),
+        "w_down": cm.dense_init(ks[1], d_ff, cfg.d_model, dt),
+        "b_down": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def mlp(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    cd = cfg.compute_dtype
+    if cfg.act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(cd)
+        u = x @ p["w_up"].astype(cd)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ p["w_down"].astype(cd)
+    h = x @ p["w_up"].astype(cd) + p["b_up"].astype(cd)
+    h = jax.nn.gelu(h)
+    return h @ p["w_down"].astype(cd) + p["b_down"].astype(cd)

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts with capacity-bounded dispatch.
+
+Two routers:
+
+  * ``topk``    — standard top-k token-choice routing; tokens overflowing an
+    expert's capacity are dropped (combine weight 0).
+  * ``laminar`` — the paper's probe-first discipline applied to MoE routing
+    (the paper names MoE routing invocations as canonical F-tasks, §II-A):
+    experts are nodes, residual capacity is Slack, per-round assignment
+    pressure is Heat. Router logits are tempered by a heat-repulsion term,
+    and tokens that overflow an expert are *bounced* to their next-best
+    expert for a bounded number of rounds (patience) instead of being
+    silently dropped — bounded dissipation instead of loss.
+
+Dispatch is sort-free and EP-shardable: a (T, E) assignment mask per top-k
+slot, positions by cumsum, gather into (E, C, d) expert buffers, batched
+expert FFN via einsum (MXU-friendly), weighted scatter back.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig, MoEConfig, Params
+
+
+def init_moe_params(key, cfg: ArchConfig) -> Params:
+    assert cfg.moe is not None
+    mc = cfg.moe
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    E, d, f = mc.num_experts, cfg.d_model, mc.d_ff_expert
+
+    def ex_init(k, shape, fan_in):
+        return (
+            jax.random.normal(k, shape, jnp.float32) / (fan_in**0.5)
+        ).astype(dt)
+
+    return {
+        "router": cm.dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": ex_init(ks[1], (E, d, f), d),
+        "w_up": ex_init(ks[2], (E, d, f), d),
+        "w_down": ex_init(ks[3], (E, f, d), f),
+    }
+
+
+def _capacity(mc: MoEConfig, n_tokens: int) -> int:
+    c = int(mc.capacity_factor * n_tokens * mc.top_k / mc.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _assign_round(
+    scores: jax.Array,  # (T, E) remaining router scores (-inf = unavailable)
+    used: jax.Array,  # (E,) slots already taken
+    cap: int,
+    need: jax.Array,  # (T,) tokens still needing a slot this round
+    assoc_scan: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Greedy one-choice assignment with capacity. Returns
+    (expert (T,), kept (T,), pos (T,), used')."""
+    e = jnp.argmax(scores, axis=-1)
+    ok = need & jnp.isfinite(jnp.max(scores, axis=-1))
+    onehot = jax.nn.one_hot(e, scores.shape[1], dtype=jnp.int32) * ok[:, None]
+    if assoc_scan:  # log-depth prefix sum (see ArchConfig.moe_assoc_scan)
+        pos_in = jax.lax.associative_scan(jnp.add, onehot, axis=0) - onehot
+    else:
+        pos_in = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos_in * onehot, axis=-1) + used[e]
+    kept = ok & (pos < cap)
+    used = used + jnp.sum(onehot * (pos < cap)[:, None].astype(jnp.int32), axis=0)
+    return e, kept, pos, used
+
+
+def moe_ffn(p: Params, cfg: ArchConfig, x: jax.Array):
+    """x: (B, S, d) -> (B, S, d); returns (out, aux) with load-balance stats."""
+    assert cfg.moe is not None
+    mc = cfg.moe
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = mc.num_experts
+    C = _capacity(mc, T)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if mc.router == "laminar":
+        # heat repulsion: experts popular in this batch get tempered logits
+        load = jnp.sum(probs, axis=0) / jnp.maximum(T, 1)  # (E,) soft load
+        logits = logits - mc.laminar_gamma * jnp.log2(1.0 + load * E)[None, :]
+        probs = jax.nn.softmax(logits, axis=-1)
+
+    n_rounds = mc.top_k + (mc.laminar_bounces if mc.router == "laminar" else 0)
+
+    scores = logits
+    used = jnp.zeros((E,), jnp.int32)
+    picks = []  # (expert, kept, pos, weight)
+    granted = jnp.zeros((T,), jnp.int32)  # how many slots each token holds
+    for r in range(n_rounds):
+        need = granted < mc.top_k
+        e, kept, pos, used = _assign_round(
+            scores, used, C, need, assoc_scan=getattr(cfg, "moe_assoc_scan", False)
+        )
+        w = jnp.take_along_axis(probs, e[:, None], axis=-1)[:, 0]
+        picks.append((e, kept, pos, jnp.where(kept, w, 0.0)))
+        granted = granted + kept.astype(jnp.int32)
+        # mask the chosen expert for the next round; a *dropped* token under
+        # the laminar router keeps searching (bounded bounce), under top-k it
+        # simply moves to its next expert (same as classic top-k order)
+        scores = jnp.where(
+            jax.nn.one_hot(e, E, dtype=bool) & (need & jnp.isfinite(scores.max(-1)))[:, None],
+            -jnp.inf,
+            scores,
+        )
+
+    # ---- dispatch: gather tokens into (E, C, d) buffers --------------------
+    buf = jnp.zeros((E * C, d), cd)
+    for e, kept, pos, _ in picks:
+        idx = jnp.where(kept, e * C + jnp.minimum(pos, C - 1), E * C)
+        buf = buf.at[idx].add(xt.astype(cd), mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    if getattr(cfg, "moe_ep_constraint", False):
+        # pin the dispatch buffer to experts-on-model (EP); the expert
+        # matmuls and hiddens then never leave the expert shard and the
+        # token<->expert movement is a single all-to-all-shaped exchange.
+        from jax.sharding import PartitionSpec as PS
+
+        buf = jax.lax.with_sharding_constraint(buf, PS("model", None, None))
+
+    # ---- expert FFN (batched over experts; EP-shardable on E) --------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))
+    if getattr(cfg, "moe_ep_constraint", False):
+        from jax.sharding import PartitionSpec as PS
+
+        y = jax.lax.with_sharding_constraint(y, PS("model", None, None))
+    y = y.reshape(E * C, d)
+
+    # ---- combine: weighted scatter back ------------------------------------
+    out = jnp.zeros((T, d), cd)
+    total_w = jnp.zeros((T,), jnp.float32)
+    for e, kept, pos, w in picks:
+        idx = jnp.where(kept, e * C + jnp.minimum(pos, C - 1), 0)
+        contrib = y[idx] * w[:, None].astype(cd)
+        out = out + jnp.where(kept[:, None], contrib, 0)
+        total_w = total_w + w
+    out = out / jnp.maximum(total_w, 1e-9)[:, None].astype(cd)
+
+    dropped = jnp.sum((granted < mc.top_k).astype(jnp.int32) * (mc.top_k - granted))
+    aux = {
+        "moe_dropped_slots": dropped,
+        "moe_load": jnp.sum(
+            jax.nn.one_hot(jnp.argmax(probs, -1), E, dtype=jnp.float32), axis=0
+        ),
+    }
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)   (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent block: linear projections to two branches,
+a short temporal conv on the recurrent branch, GeLU gating on the other.
+The diagonal linear recurrence runs as an associative scan over the sequence
+(O(log S) depth) for training/prefill and as a single step for decode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+C_CONST = 8.0  # Griffin's fixed scaling of the recurrence gate
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, d_rnn) recurrent state
+    conv: jax.Array  # (B, W-1, d_rnn) temporal-conv tail
+
+
+def init_rglru_params(key, cfg: ArchConfig, conv_width: int = 4) -> Params:
+    d, dr = cfg.d_model, cfg.d_rnn or cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda) ~ U(0.9, 0.999)^ (1/c)
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / C_CONST) / (1 - u ** (1.0 / C_CONST)))
+    return {
+        "w_in_rec": cm.dense_init(ks[1], d, dr, dt),
+        "w_in_gate": cm.dense_init(ks[2], d, dr, dt),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, dr)) * 0.1).astype(dt),
+        "w_a": cm.dense_init(ks[4], dr, dr, dt),
+        "b_a": jnp.zeros((dr,), dt),
+        "w_x": cm.dense_init(ks[5], dr, dr, dt),
+        "b_x": jnp.zeros((dr,), dt),
+        "lam": lam.astype(dt),
+        "w_out": cm.dense_init(ks[6], dr, d, dt),
+    }
+
+
+def _rglru_scan(
+    p: Params, x: jax.Array, h0: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """Diagonal linear recurrence via associative scan. x: (B, S, dr)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(x @ p["w_a"].astype(x.dtype) + p["b_a"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ p["w_x"].astype(x.dtype) + p["b_x"].astype(x.dtype))
+    log_a_base = -jax.nn.softplus(-p["lam"].astype(f32))  # log sigmoid(lam)
+    log_a = C_CONST * r.astype(f32) * log_a_base  # (B,S,dr), <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(f32) * x.astype(f32)
+    )
+    if h0 is not None:
+        # fold the carry-in state as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None, :].astype(f32), gated], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, d_model)
+    state: Optional[RGLRUState] = None,
+) -> Tuple[jax.Array, Optional[RGLRUState]]:
+    cd = cfg.compute_dtype
+    rec = x @ p["w_in_rec"].astype(cd)
+    gate = jax.nn.gelu(x @ p["w_in_gate"].astype(cd))
+
+    # temporal conv (depthwise, width W) with optional carried tail
+    W = p["conv_w"].shape[0]
+    if state is not None:
+        rec_ext = jnp.concatenate([state.conv.astype(cd), rec], axis=1)
+    else:
+        rec_ext = jnp.pad(rec, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        rec_ext[:, i : i + rec.shape[1], :] * p["conv_w"][i].astype(cd)
+        for i in range(W)
+    )
+    new_tail = rec_ext[:, -(W - 1) :, :] if W > 1 else rec_ext[:, :0, :]
+
+    h, h_last = _rglru_scan(p, conv, state.h if state is not None else None)
+    out = (h * gate) @ p["w_out"].astype(cd)
+    new_state = RGLRUState(h=h_last, conv=new_tail.astype(cd)) if state is not None else None
+    return out, new_state
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, conv_width: int = 4) -> RGLRUState:
+    dr = cfg.d_rnn or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, dr), cfg.compute_dtype),
+        conv=jnp.zeros((batch, conv_width - 1, dr), cfg.compute_dtype),
+    )

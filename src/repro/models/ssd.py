@@ -1,0 +1,191 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: within a chunk of length L the sequence mixing is computed in
+its quadratic "attention" dual form (MXU-friendly einsums over L x L masks);
+across chunks a diagonal linear recurrence carries the (H, P, N) state — the
+scan touches only S/L states, which is what makes 500k-token sequences and
+O(1) decode possible.
+
+Layer structure follows mamba2: in_proj -> (z, x, B, C, dt); short depthwise
+conv over (x, B, C); scalar-per-head A; SiLU gating by z; out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig, Params
+
+
+class SSDState(NamedTuple):
+    h: jax.Array  # (B, H, P, N) recurrent state
+    conv: jax.Array  # (B, W-1, conv_dim) conv tail
+
+
+def _dims(cfg: ArchConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssd_params(key, cfg: ArchConfig) -> Params:
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = _dims(cfg)
+    dt_p = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * sc.d_state + H  # z, x, B, C, dt
+    return {
+        "in_proj": cm.dense_init(ks[0], d, proj_out, dt_p),
+        "conv_w": (jax.random.normal(ks[1], (sc.conv_width, conv_dim)) * 0.1).astype(dt_p),
+        "conv_b": jnp.zeros((conv_dim,), dt_p),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dt_p),
+        "out_proj": cm.dense_init(ks[3], d_inner, d, dt_p),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) lower-triangular pairwise cumulative sums:
+    out[l, s] = sum_{s < j <= l} a[j], -inf above the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) inputs (already dt-scaled)
+    a: jax.Array,  # (B, S, H)    log decay per step (A * dt, <= 0)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    h0: Optional[jax.Array],  # (B, H, P, N) carried state
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // L
+    xc = x.reshape(Bsz, nc, L, H, P)
+    ac = a.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    a_cum = jnp.cumsum(ac, axis=2)  # (B, nc, L, H)
+    a_tot = a_cum[:, :, -1, :]  # (B, nc, H)
+
+    # --- intra-chunk (quadratic dual form) --------------------------------
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B, nc, H, L, L)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (B, nc, L, L)
+    att = scores[:, :, None, :, :] * Lmat  # (B, nc, H, L, L)
+    y_diag = jnp.einsum(
+        "bchls,bcshp->bclhp", att.astype(x.dtype), xc
+    )
+
+    # --- chunk summaries ----------------------------------------------------
+    decay_tail = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (B, nc, L, H)
+    states = jnp.einsum(
+        "bcln,bclh,bclhp->bchpn", Bc.astype(jnp.float32), decay_tail, xc.astype(jnp.float32)
+    )  # (B, nc, H, P, N)
+
+    # --- inter-chunk recurrence (scan over nc states only) ------------------
+    def step(h, inp):
+        st, at = inp  # (B,H,P,N), (B,H)
+        h_new = h * jnp.exp(at)[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    h_last, h_in = jax.lax.scan(
+        step,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # --- inter-chunk contribution -------------------------------------------
+    y_off = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", Cc.astype(jnp.float32), jnp.exp(a_cum), h_in
+    ).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(Bsz, nc * L, H, P)[:, : S, :, :]
+    return y, h_last
+
+
+def ssd_block(
+    p: Params,
+    cfg: ArchConfig,
+    xin: jax.Array,  # (B, S, d_model)
+    state: Optional[SSDState] = None,
+) -> Tuple[jax.Array, Optional[SSDState]]:
+    sc = cfg.ssm
+    cd = cfg.compute_dtype
+    d_inner, H, conv_dim = _dims(cfg)
+    Bsz, S, _ = xin.shape
+
+    zxbcdt = xin @ p["in_proj"].astype(cd)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    # depthwise temporal conv over (x, B, C)
+    W = p["conv_w"].shape[0]
+    if state is not None:
+        ext = jnp.concatenate([state.conv.astype(cd), xbc], axis=1)
+    else:
+        ext = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        ext[:, i : i + S, :] * p["conv_w"][i].astype(cd) for i in range(W)
+    ) + p["conv_b"].astype(cd)
+    conv = jax.nn.silu(conv)
+    new_tail = ext[:, -(W - 1) :, :] if W > 1 else ext[:, :0, :]
+
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + sc.d_state], axis=-1)
+    xs = xs.reshape(Bsz, S, H, sc.head_dim)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    a = A[None, None, :] * dt_f  # log decay per step
+    x_dt = xs * dt_f[..., None].astype(cd)
+
+    h0 = state.h if state is not None else None
+    y, h_last = ssd_chunked(x_dt, a, Bm, Cm, h0, sc.chunk)
+    y = y + xs * p["D"].astype(cd)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+
+    y = cm.rms_norm(p["norm_scale"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(cd)
+    new_state = (
+        SSDState(h=h_last.astype(jnp.float32), conv=new_tail.astype(cd))
+        if state is not None
+        else None
+    )
+    return out, new_state
+
+
+def init_ssd_state(cfg: ArchConfig, batch: int) -> SSDState:
+    sc = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return SSDState(
+        h=jnp.zeros((batch, H, sc.head_dim, sc.d_state), jnp.float32),
+        conv=jnp.zeros((batch, sc.conv_width - 1, conv_dim), cfg.compute_dtype),
+    )

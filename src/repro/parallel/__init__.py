@@ -1,0 +1,5 @@
+"""Parallelism: sharding rules + collective helpers."""
+
+from repro.parallel import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,168 @@
+"""Sharding rules: parameter, batch, cache and optimizer-state PartitionSpecs.
+
+Strategy (the paper-era defaults; §Perf iterates on these):
+
+  * weights: FSDP-style 2D sharding — last dim over "model" (tensor
+    parallel), second-to-last over "data" (ZeRO-3 weight sharding), each axis
+    degraded to None when the dim is not divisible (e.g. mamba2's fused
+    in_proj). Norm scales and other 1D leaves stay replicated.
+  * activations/batch: batch dim over ("pod", "data").
+  * KV caches: batch over DP axes and *sequence over "model"* — decode-time
+    attention contracts the sequence dim, so GSPMD turns it into partial
+    softmax/matmul with a small combine, and a 32k-context cache fits HBM.
+  * optimizer moments: same spec as their parameter.
+
+Every rule is divisibility-checked against the actual mesh, so one rule set
+serves all 10 architectures x all meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _fit(mesh, dim_size: int, axis):
+    """Return axis if dim divisible by its mesh size, else None."""
+    size = _axis_size(mesh, axis)
+    return axis if size and dim_size % size == 0 else None
+
+
+# leaves that sit on the ROW-parallel side of a Megatron block: their input
+# (contracting) dim carries the model shard; output dim is the residual d.
+ROW_PARALLEL_LEAVES = ("w_down", "wo", "out_proj", "w_out")
+
+
+def param_spec(
+    mesh,
+    path: str,
+    shape,
+    train: bool = True,
+    row_parallel: bool = False,
+    kv_replicated: bool = False,
+) -> P:
+    """Spec for one parameter leaf. ``path`` is the '/'-joined key path.
+
+    ``train=True`` adds ZeRO-3 weight sharding over the DP axes (the
+    optimizer state amortizes the per-layer gathers). For inference steps
+    (prefill/decode) weights are TP-sharded only and replicated over DP —
+    re-gathering weights every decode step would be pure collective waste.
+
+    ``row_parallel=True`` gives down/out projections row-parallel specs
+    (contracting dim on "model") so hidden activations never re-shard.
+    """
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    # 1D leaves (norm scales, biases, lambdas): replicate — cheap & robust.
+    if nd == 1:
+        return P(None)
+    # group-stacked leaves have a leading n_groups axis that never shards
+    lead = 1 if path.startswith("stack") or path.startswith("enc_stack") else 0
+    core = shape[lead:]
+    if len(core) == 1:
+        return P(*([None] * nd))
+    spec = [None] * nd
+    leaf_name = path.rsplit("/", 1)[-1]
+    if kv_replicated and leaf_name in ("wk", "wv"):
+        # Megatron GQA: KV projections replicated over model; ZeRO-3 intact
+        if train and dp:
+            spec[nd - 2] = _fit(mesh, core[-2], dp)
+        return P(*spec)
+    if row_parallel and leaf_name in ROW_PARALLEL_LEAVES:
+        # row-parallel: input dim on model; ZeRO-3 over the output dim
+        spec[nd - 2] = _fit(mesh, core[-2], "model")
+        if train and dp:
+            spec[nd - 1] = _fit(mesh, core[-1], dp)
+        return P(*spec)
+    # column-parallel default: output dim on model; ZeRO-3 over input dim
+    spec[nd - 1] = _fit(mesh, core[-1], "model")
+    if train and dp:
+        spec[nd - 2] = _fit(mesh, core[-2], dp)
+    return P(*spec)
+
+
+def tree_param_specs(
+    mesh,
+    params_shape: Any,
+    train: bool = True,
+    row_parallel: bool = False,
+    kv_replicated: bool = False,
+) -> Any:
+    """Map param_spec over an eval_shape pytree (dict-of-dict structure)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        specs.append(
+            param_spec(
+                mesh, keys, leaf.shape, train=train,
+                row_parallel=row_parallel, kv_replicated=kv_replicated,
+            )
+        )
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh) -> P:
+    dp = dp_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def tokens_spec(mesh) -> P:
+    dp = dp_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0], None)
+
+
+def cache_spec(mesh, path: str, shape) -> P:
+    """KV caches: (G, B, S, Hkv, D) -> (None, DP, 'model', None, None);
+    recurrent/SSD states and conv tails: batch over DP, rest replicated."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    nd = len(shape)
+    spec = [None] * nd
+    if path.endswith("pos"):
+        return P(*spec)
+    if nd >= 4 and "b" in path:  # stacked KV cache (G, B, S, H, D)
+        if dp and shape[1] % _axis_size(mesh, dp) == 0:
+            spec[1] = dp
+        if nd == 5:
+            spec[2] = _fit(mesh, shape[2], "model")
+        return P(*spec)
+    if nd >= 2:
+        if dp and shape[1] % max(_axis_size(mesh, dp), 1) == 0:
+            spec[1] = dp
+    return P(*spec)
+
+
+def tree_cache_specs(mesh, cache_shape: Any) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        specs.append(cache_spec(mesh, keys, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,6 @@
+"""Laminar-as-a-framework-feature: serving admission + MoE routing."""
+
+from repro.sched.paging import PageAllocator
+from repro.sched.serving import LaminarServingScheduler, Request, ServeConfig
+
+__all__ = ["PageAllocator", "LaminarServingScheduler", "Request", "ServeConfig"]

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, FT loop."""
+
+from repro.train import checkpoint, data, optimizer, straggler, trainer
+
+__all__ = ["checkpoint", "data", "optimizer", "straggler", "trainer"]

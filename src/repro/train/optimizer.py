@@ -1,0 +1,123 @@
+"""Optimizer substrate (no external deps): AdamW with global-norm clipping,
+warmup+cosine schedule, and an optional int8 gradient-compression stage with
+error feedback for cross-pod all-reduces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # gradient compression (int8 + error feedback) for the DP all-reduce
+    compress_grads: bool = False
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    err: Any  # error-feedback residual (only if compress_grads)
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        err=jax.tree.map(zeros, params) if cfg.compress_grads else None,
+    )
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def apply_compression(cfg: OptConfig, grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Quantize grads (+error feedback); the decompressed value is what the
+    optimizer consumes, the residual is carried to the next step. The int8
+    payload is what would cross the pod-level DP all-reduce."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress_int8(g32)
+        deq = decompress_int8(q, s)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(
+    cfg: OptConfig, params: Any, grads: Any, st: AdamState
+) -> Tuple[Any, AdamState, dict]:
+    if cfg.compress_grads:
+        grads, new_err = apply_compression(cfg, grads, st.err)
+    else:
+        new_err = st.err
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = st.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, st.mu, st.nu)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = AdamState(step=step, mu=new_mu, nu=new_nu, err=new_err)
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

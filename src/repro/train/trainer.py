@@ -1,0 +1,152 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler breaker,
+elastic re-meshing, compute/comm overlap knobs.
+
+The loop is deliberately mesh-agnostic: every mesh-dependent object (jitted
+step, shardings, placed state) is built by ``_build(mesh)``, so elastic
+re-meshing after a (simulated or real) node failure is "checkpoint -> new
+mesh -> rebuild -> restore" — the same code path as cold restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.launch import steps as steps_mod
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.parallel import sharding
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    opt: opt.OptConfig = dataclasses.field(default_factory=opt.OptConfig)
+    donate: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        tcfg: TrainerConfig,
+        mesh,
+        data_iter,
+        fail_injector: Optional[Callable[[int], bool]] = None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = data_iter
+        self.monitor = StragglerMonitor()
+        self.checkpointer = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+        self.fail_injector = fail_injector or (lambda step: False)
+        self.metrics_log: list = []
+        self._build(mesh)
+
+    # ---- mesh-dependent construction (elastic re-mesh re-enters here) ----
+    def _build(self, mesh):
+        self.mesh = mesh
+        cfg, tcfg = self.cfg, self.tcfg
+        params_abs = steps_mod.abstract_params(cfg)
+        self.pspecs = sharding.tree_param_specs(mesh, params_abs)
+        self.psharding = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.pspecs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+        step_fn = steps_mod.make_train_step(cfg, tcfg.opt)
+        self.train_step = jax.jit(
+            step_fn, donate_argnums=(0, 1) if tcfg.donate else ()
+        )
+
+    def init_state(self, seed: int = 0):
+        with self.mesh:
+            params = jax.jit(
+                lambda k: lm.init_params(self.cfg, k),
+                out_shardings=self.psharding,
+            )(jax.random.PRNGKey(seed))
+        opt_state = opt.init_opt_state(self.tcfg.opt, params)
+        return params, opt_state, 0
+
+    def restore_or_init(self, seed: int = 0):
+        abstract = {
+            "params": steps_mod.abstract_params(self.cfg),
+            "opt": steps_mod.abstract_opt_state(self.cfg, self.tcfg.opt),
+        }
+        step, tree = self.checkpointer.restore_latest(
+            abstract, placer=lambda k, a: jax.device_put(a)
+        )
+        if step is None:
+            return self.init_state(seed)
+        return tree["params"], tree["opt"], step
+
+    # ---- elastic re-mesh ---------------------------------------------------
+    def remesh(self, new_mesh, params, opt_state, step):
+        """Failure path: persist, rebuild for the surviving mesh, restore."""
+        self.checkpointer.wait()
+        ckpt.save(
+            f"{self.tcfg.ckpt_dir}/step_{step:08d}", step,
+            {"params": params, "opt": opt_state},
+        )
+        self._build(new_mesh)
+        abstract = {
+            "params": steps_mod.abstract_params(self.cfg),
+            "opt": steps_mod.abstract_opt_state(self.cfg, self.tcfg.opt),
+        }
+        tree = ckpt.restore(
+            f"{self.tcfg.ckpt_dir}/step_{step:08d}", abstract,
+            placer=lambda k, a: jax.device_put(a),
+        )
+        self.monitor.reset()
+        return tree["params"], tree["opt"], step
+
+    # ---- the loop ------------------------------------------------------------
+    def run(self, seed: int = 0) -> Dict[str, Any]:
+        params, opt_state, start_step = self.restore_or_init(seed)
+        losses = []
+        with self.mesh:
+            for step in range(start_step, self.tcfg.total_steps):
+                if self.fail_injector(step):
+                    # simulated node loss: re-mesh onto the same devices
+                    # (real deployments pass the survivors' mesh)
+                    params, opt_state, step = self.remesh(
+                        self.mesh, params, opt_state, step
+                    )
+                batch = {
+                    k: jax.device_put(v) for k, v in next(self.data).items()
+                }
+                t0 = time.time()
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                verdict = self.monitor.observe(time.time() - t0)
+                if verdict == "tripped":
+                    params, opt_state, step = self.remesh(
+                        self.mesh, params, opt_state, step
+                    )
+                losses.append(float(metrics["loss"]))
+                if step % self.tcfg.log_every == 0:
+                    self.metrics_log.append(
+                        {"step": step, "loss": float(metrics["loss"])}
+                    )
+                if step > 0 and step % self.tcfg.ckpt_every == 0:
+                    self.checkpointer.save_async(
+                        step, {"params": params, "opt": opt_state}
+                    )
+        self.checkpointer.wait()
+        return {
+            "final_loss": losses[-1] if losses else float("nan"),
+            "losses": np.asarray(losses),
+            "steps": len(losses),
+        }

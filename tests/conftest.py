@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run forces 512 in its
+# own process); keep the default platform untouched here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,102 @@
+"""Unit + property tests for the resource-atom bitmap substrate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitmap
+
+
+def np_max_run(bits_row: np.ndarray) -> int:
+    best = cur = 0
+    for b in bits_row:
+        cur = cur + 1 if b else 0
+        best = max(best, cur)
+    return best
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(words):
+    w = jnp.asarray([words], jnp.uint32)
+    atoms = w.shape[-1] * 32
+    bits = bitmap.unpack_bits(w, atoms)
+    back = bitmap.pack_bits(bits)
+    assert (np.asarray(back) == np.asarray(w)).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=100, deadline=None)
+def test_popcount_matches_python(word):
+    got = int(bitmap.popcount_words(jnp.asarray([word], jnp.uint32))[0])
+    assert got == bin(word).count("1")
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 32))
+@settings(max_examples=100, deadline=None)
+def test_contiguous_words_matches_bitplane(word, m):
+    w = jnp.asarray([word], jnp.uint32)
+    got = bool(bitmap.contiguous_feasible_words(w, jnp.asarray([m]))[0])
+    bits = np.asarray(bitmap.unpack_bits(w[:, None], 32))[0]
+    want = np_max_run(bits) >= m if m > 0 else True
+    assert got == want
+
+
+@pytest.mark.parametrize("atoms", [32, 64])
+def test_alloc_dispersed_takes_lowest_bits(atoms):
+    rng = np.random.default_rng(0)
+    bits = jnp.asarray(rng.uniform(size=(16, atoms)) < 0.5)
+    alloc, feas = bitmap.alloc_dispersed(bits, jnp.full((16,), 3))
+    a = np.asarray(alloc)
+    b = np.asarray(bits)
+    for i in range(16):
+        if feas[i]:
+            assert a[i].sum() == 3
+            assert (a[i] & ~b[i]).sum() == 0  # only free atoms taken
+            # lowest-index free atoms
+            free_idx = np.nonzero(b[i])[0]
+            assert set(np.nonzero(a[i])[0]) == set(free_idx[:3])
+        else:
+            assert a[i].sum() == 0
+
+
+@pytest.mark.parametrize("policy", ["first", "best"])
+@pytest.mark.parametrize("m", [1, 4, 9])
+def test_alloc_contiguous_is_contiguous(policy, m):
+    rng = np.random.default_rng(1)
+    bits = jnp.asarray(rng.uniform(size=(32, 64)) < 0.6)
+    if policy == "best":
+        alloc, feas = bitmap.alloc_contiguous_bestfit(bits, jnp.full((32,), m))
+    else:
+        alloc, feas = bitmap.alloc_contiguous(bits, jnp.full((32,), m))
+    a = np.asarray(alloc)
+    b = np.asarray(bits)
+    for i in range(32):
+        want_feasible = np_max_run(b[i]) >= m
+        assert bool(feas[i]) == want_feasible
+        if feas[i]:
+            idx = np.nonzero(a[i])[0]
+            assert len(idx) == m
+            assert (np.diff(idx) == 1).all()  # strictly contiguous
+            assert (a[i] & ~b[i]).sum() == 0
+
+
+def test_bestfit_preserves_long_runs():
+    # one short run (3) and one long run (10): best-fit dispersed demand of 2
+    # must come from the short run
+    bits = np.zeros((1, 32), bool)
+    bits[0, 2:5] = True
+    bits[0, 10:20] = True
+    alloc, feas = bitmap.alloc_dispersed_bestfit(jnp.asarray(bits), jnp.asarray([2]))
+    assert bool(feas[0])
+    idx = np.nonzero(np.asarray(alloc)[0])[0]
+    assert set(idx) <= {2, 3, 4}
+
+
+def test_max_run():
+    bits = np.zeros((1, 32), bool)
+    bits[0, 3:9] = True
+    bits[0, 20:23] = True
+    assert int(bitmap.max_run(jnp.asarray(bits))[0]) == 6

@@ -1,0 +1,162 @@
+"""Laminar engine: behaviour + invariants.
+
+These use a small cluster (fast) — the paper-scale numbers come from
+``benchmarks/``. The invariants are the load-bearing part: atom conservation
+(no leak through any lifecycle path), bounded search, priority-ordered
+survival, two-phase squatter recovery, regeneration under loss.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LaminarConfig, LaminarEngine, MemoryConfig, WorkloadConfig
+from repro.core import bitmap
+from repro.core.state import EMPTY, RUNNING, SUSPENDED
+
+BASE = LaminarConfig(
+    num_nodes=64,
+    zone_size=32,
+    probe_capacity=1024,
+    max_arrivals_per_tick=64,
+    horizon_ms=250.0,
+    rho=0.6,
+)
+
+
+def run_final_state(cfg, seed=0, ticks=None):
+    eng = LaminarEngine(cfg)
+    s, lam = eng.init(seed)
+    nt = ticks or cfg.num_ticks
+    final, ts = eng._runner(lam, nt)(s)
+    return s, final, ts
+
+
+class TestInvariants:
+    def test_atom_conservation(self):
+        """free + held-by-probes == initial free, at every lifecycle mix."""
+        for seed in (0, 1):
+            init, final, _ = run_final_state(
+                dataclasses.replace(BASE, rho=0.9), seed=seed
+            )
+            A = BASE.atoms_per_node
+            free0 = int(bitmap.free_atoms(init.free).sum())
+            free1 = int(bitmap.free_atoms(final.free).sum())
+            held = int(bitmap.free_atoms(final.alloc).sum()) + int(
+                bitmap.free_atoms(final.alloc2).sum()
+            )
+            assert free1 + held == free0
+
+    def test_no_double_allocation(self):
+        """A probe's held atoms are actually absent from the node's free map."""
+        _, final, _ = run_final_state(BASE)
+        free = np.asarray(final.free)
+        alloc = np.asarray(final.alloc)
+        nodes = np.asarray(final.alloc_node)
+        for p in range(alloc.shape[0]):
+            if nodes[p] >= 0 and alloc[p].any():
+                assert (free[nodes[p]] & alloc[p]).sum() == 0
+
+    def test_patience_bounded_search(self):
+        """No live kinetic probe ever has negative-beyond-one-action patience."""
+        _, final, _ = run_final_state(dataclasses.replace(BASE, rho=0.95))
+        st = np.asarray(final.st)
+        pat = np.asarray(final.patience)
+        live_kinetic = (st > EMPTY) & (st < RUNNING)
+        # one in-flight action may take patience below the floor, never below
+        # floor - max action cost
+        assert (pat[live_kinetic] >= BASE.fastfail_floor - BASE.bounce_cost - BASE.eval_cost - 1e-3).all()
+
+
+class TestBehaviour:
+    def test_low_load_high_success(self):
+        out = LaminarEngine(dataclasses.replace(BASE, rho=0.4)).run(seed=0)
+        assert out["start_success_ratio"] > 0.97
+        assert out["p99_ms"] < 100.0
+
+    def test_success_degrades_gracefully(self):
+        lo = LaminarEngine(dataclasses.replace(BASE, rho=0.4)).run(seed=0)
+        hi = LaminarEngine(dataclasses.replace(BASE, rho=0.9)).run(seed=0)
+        assert hi["start_success_ratio"] <= lo["start_success_ratio"] + 0.01
+        assert hi["start_success_ratio"] > 0.7  # graceful, not collapse
+
+    def test_two_phase_recovers_squatters(self):
+        # horizon must exceed the pull TTL by enough for reclamation to matter
+        wl = dataclasses.replace(BASE.workload, squatter_ratio=0.10)
+        base = dataclasses.replace(
+            BASE, workload=wl, regeneration=False, rho=0.5, horizon_ms=800.0
+        )
+        on = LaminarEngine(dataclasses.replace(base, two_phase=True)).run(seed=0)
+        off = LaminarEngine(dataclasses.replace(base, two_phase=False)).run(seed=0)
+        assert on["start_success_nonsquat"] > off["start_success_nonsquat"]
+        assert on["squat_expired"] > 0  # TTL actually fired
+
+    def test_regeneration_recovers_loss(self):
+        cfg = dataclasses.replace(BASE, hop_loss=0.25, two_phase=False)
+        on = LaminarEngine(dataclasses.replace(cfg, regeneration=True)).run(seed=0)
+        off = LaminarEngine(dataclasses.replace(cfg, regeneration=False)).run(seed=0)
+        assert on["start_success_ratio"] > off["start_success_ratio"]
+        assert on["regen_spawned"] > 0
+
+    def test_staleness_tolerance(self):
+        fresh = LaminarEngine(dataclasses.replace(BASE, extra_sync_delay_ms=0.0)).run(seed=0)
+        stale = LaminarEngine(dataclasses.replace(BASE, extra_sync_delay_ms=100.0)).run(seed=0)
+        assert stale["start_success_ratio"] > fresh["start_success_ratio"] - 0.05
+
+
+class TestAirlock:
+    CFG = dataclasses.replace(
+        BASE,
+        rho=0.7,
+        memory=MemoryConfig(enabled=True),
+        horizon_ms=400.0,
+    )
+
+    def test_airlock_eliminates_l_oom(self):
+        off = LaminarEngine(dataclasses.replace(self.CFG, airlock=False)).run(seed=0)
+        on = LaminarEngine(dataclasses.replace(self.CFG, airlock=True)).run(seed=0)
+        assert off["oom_kill_l"] > 0  # blind kernel OOM destroys L-tasks
+        assert on["oom_kill_l"] == 0 and on["oom_kill_f"] == 0
+        assert on["suspended_cnt"] > 0
+        assert on["exec_survival_ratio"] >= off["exec_survival_ratio"] - 0.02
+
+    def test_priority_ordered_suspension(self):
+        """Suspended tasks must be drawn from the low-E_v end per node."""
+        cfg = dataclasses.replace(self.CFG, airlock=True)
+        eng = LaminarEngine(cfg)
+        s, lam = eng.init(0)
+        final, _ = eng._runner(lam, cfg.num_ticks)(s)
+        st = np.asarray(final.st)
+        ev = np.asarray(final.ev)
+        node = np.asarray(final.alloc_node)
+        susp = st == SUSPENDED
+        run = st == RUNNING
+        # at each node, every suspended task must have E_v <= every running
+        # task that was resident when it was suspended; steady-state proxy:
+        # median suspended E_v is below median running E_v
+        if susp.sum() > 3 and run.sum() > 3:
+            assert np.median(ev[susp]) <= np.median(ev[run])
+
+    def test_insitu_resume_happens(self):
+        out = LaminarEngine(dataclasses.replace(self.CFG, airlock=True)).run(seed=0)
+        assert out["resumed_insitu"] > 0
+
+    def test_survival_ttl_bounds_reclamation(self):
+        out = LaminarEngine(
+            dataclasses.replace(self.CFG, airlock=True, t_susp_ms=5.0, t_surv_ms=10.0)
+        ).run(seed=0)
+        # with tiny windows, reactivation and reclamation must both occur
+        assert out["reactivated"] > 0
+        assert out["reclaimed"] >= 0  # bounded, not negative/NaN
+
+
+class TestControlWork:
+    def test_near_constant_control_work(self):
+        """Per-success control work should stay within a small constant band
+        as load rises (the paper's O(1) claim, Fig. 4)."""
+        lo = LaminarEngine(dataclasses.replace(BASE, rho=0.4)).run(seed=0)
+        hi = LaminarEngine(dataclasses.replace(BASE, rho=0.9)).run(seed=0)
+        assert lo["control_us_per_start"] < 1.0
+        assert hi["control_us_per_start"] < 5 * lo["control_us_per_start"]

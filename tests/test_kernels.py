@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.bitmap_fit import bitmap_fit, bitmap_fit_ref
+from repro.kernels.utility_topk import utility_topk, utility_topk_ref
+from repro.kernels.zone_aggregate import zone_aggregate, zone_aggregate_ref
+
+
+@pytest.mark.parametrize("W", [1, 2, 4])
+@pytest.mark.parametrize("N", [1, 7, 300, 1024, 1500])
+def test_bitmap_fit_sweep(W, N):
+    rng = np.random.default_rng(42 + W + N)
+    words = rng.integers(0, 2**32, size=(N, W), dtype=np.uint32)
+    mass = rng.integers(0, 32 * W + 1, size=N).astype(np.int32)
+    contig = rng.integers(0, 2, size=N).astype(np.int32)
+    got = np.asarray(bitmap_fit(jnp.asarray(words), jnp.asarray(mass), jnp.asarray(contig)))
+    want = np.asarray(
+        bitmap_fit_ref(jnp.asarray(words), jnp.asarray(mass), jnp.asarray(contig))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(0, 2**32 - 1),
+    st.integers(0, 64),
+    st.booleans(),
+)
+@settings(max_examples=60, deadline=None)
+def test_bitmap_fit_property(w0, w1, m, contig):
+    words = jnp.asarray([[w0, w1]], jnp.uint32)
+    mass = jnp.asarray([m], jnp.int32)
+    c = jnp.asarray([contig])
+    got = int(bitmap_fit(words, mass, c)[0])
+    want = int(bitmap_fit_ref(words, mass, c)[0])
+    assert got == want
+
+
+@pytest.mark.parametrize("P,K", [(1, 4), (100, 8), (513, 16), (2048, 8)])
+@pytest.mark.parametrize("gamma", [0.5, 1.0, 2.0])
+def test_utility_topk_sweep(P, K, gamma):
+    rng = np.random.default_rng(P * K)
+    s = rng.uniform(0, 64, (P, K)).astype(np.float32)
+    h = rng.uniform(0, 32, (P, K)).astype(np.float32)
+    eps = rng.normal(0, 0.5, (P, K)).astype(np.float32)
+    feas = rng.integers(0, 2, (P, K)).astype(np.int32)
+    bi, bv = utility_topk(s, h, eps, feas, gamma)
+    ri, rv = utility_topk_ref(s, h, eps, feas, gamma)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(rv), rtol=1e-5, atol=1e-5)
+
+
+def test_utility_topk_infeasible_rows():
+    s = np.ones((4, 4), np.float32)
+    h = np.ones((4, 4), np.float32)
+    eps = np.zeros((4, 4), np.float32)
+    feas = np.zeros((4, 4), np.int32)
+    _, bv = utility_topk(s, h, eps, feas, 1.0)
+    assert (np.asarray(bv) < -1e37).all()
+
+
+@pytest.mark.parametrize("Z,M", [(1, 8), (10, 300), (33, 257)])
+def test_zone_aggregate_sweep(Z, M):
+    rng = np.random.default_rng(Z * M)
+    sg = rng.uniform(0, 64, (Z, M)).astype(np.float32)
+    hg = rng.uniform(0, 8, (Z, M)).astype(np.float32)
+    mask = (rng.uniform(size=(Z, M)) < 0.7).astype(np.float32)
+    zs, zh = zone_aggregate(sg, hg, mask)
+    rs, rh = zone_aggregate_ref(sg, hg, mask)
+    np.testing.assert_allclose(np.asarray(zs), np.asarray(rs), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(zh), np.asarray(rh), rtol=1e-5)

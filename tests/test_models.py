@@ -1,0 +1,208 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, get_smoke, list_archs
+from repro.configs.shapes import SHAPES
+from repro.models import lm
+
+B, S = 2, 24
+
+
+def make_batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.enc_layers > 0:
+        batch["enc_embeds"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.mrope_sections is not None:
+        base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        batch["pos3"] = jnp.broadcast_to(base[None], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+
+    logits, aux = lm.forward(
+        cfg, params, batch["tokens"], batch.get("pos3"), batch.get("enc_embeds")
+    )
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch)[0]
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(
+        float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads)
+    )
+    assert np.isfinite(gnorm) and gnorm > 0  # gradients flow everywhere
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_prefill_decode_shapes(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    caches = lm.init_cache(cfg, B, S + 8)
+    pf, caches = lm.prefill(
+        cfg, params, batch["tokens"], caches,
+        batch.get("pos3"), batch.get("enc_embeds"),
+    )
+    assert pf.shape == (B, 1, cfg.vocab)
+    logits, caches = lm.decode_step(
+        cfg, params, batch["tokens"][:, -1:], jnp.asarray(S, jnp.int32),
+        caches, None, batch.get("enc_embeds"),
+    )
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen3-1.7b", "gemma2-9b", "mamba2-130m", "recurrentgemma-2b"]
+)
+def test_decode_matches_forward(arch):
+    """prefill(S-1) + decode_step(S-1th token) must reproduce forward's last
+    logits — the correctness contract between training and serving paths."""
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    full_logits, _ = lm.forward(cfg, params, tokens)
+    caches = lm.init_cache(cfg, B, S + 4)
+    _, caches = lm.prefill(cfg, params, tokens[:, : S - 1], caches)
+    dec_logits, _ = lm.decode_step(
+        cfg, params, tokens[:, S - 1 :], jnp.asarray(S - 1, jnp.int32), caches
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]),
+        np.asarray(full_logits[:, -1]),
+        rtol=0.05, atol=0.05,
+    )
+
+
+def test_gqa_grouped_matches_repeat_kv():
+    """The grouped-einsum GQA path (perf knob) must be numerically identical
+    to the repeat_kv baseline."""
+    import dataclasses
+
+    cfg0 = get_smoke("qwen2.5-32b")  # GQA with kv < heads
+    cfg1 = dataclasses.replace(cfg0, gqa_grouped=True)
+    params = lm.init_params(cfg0, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg0.vocab)
+    l0, _ = lm.forward(cfg0, params, tokens)
+    l1, _ = lm.forward(cfg1, params, tokens)
+    np.testing.assert_allclose(
+        np.asarray(l0), np.asarray(l1), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_sharded_xent_matches_naive():
+    import dataclasses
+
+    cfg0 = get_smoke("qwen3-1.7b")
+    cfg1 = dataclasses.replace(cfg0, sharded_xent=True)
+    params = lm.init_params(cfg0, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg0.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    l0, _ = lm.loss_fn(cfg0, params, batch)
+    l1, _ = lm.loss_fn(cfg1, params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-3)
+
+
+def test_moe_assoc_scan_matches_cumsum():
+    import dataclasses
+
+    from repro.models import moe
+
+    cfg0 = get_smoke("olmoe-1b-7b")
+    cfg1 = dataclasses.replace(cfg0, moe_assoc_scan=True)
+    params = moe.init_moe_params(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, cfg0.d_model)).astype(
+        cfg0.compute_dtype
+    )
+    o0, a0 = moe.moe_ffn(params, cfg0, x)
+    o1, a1 = moe.moe_ffn(params, cfg1, x)
+    np.testing.assert_allclose(
+        np.asarray(o0, np.float32), np.asarray(o1, np.float32), rtol=2e-2, atol=2e-2
+    )
+    assert int(a0["moe_dropped_slots"]) == int(a1["moe_dropped_slots"])
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = get_smoke("gemma2-9b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, params, tokens)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.logit_softcap + 1e-3
+
+
+def test_local_window_masks_distant_tokens():
+    """In a local-attention arch, token logits must be invariant to tokens
+    further back than the window."""
+    cfg = get_smoke("gemma2-9b")  # window = 8 in smoke config
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    t1 = jax.random.randint(k1, (1, S), 0, cfg.vocab)
+    # perturb only the first token (distance S-1 > window from the last)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab)
+    l1, _ = lm.forward(cfg, params, t1)
+    l2, _ = lm.forward(cfg, params, t2)
+    # global layers alternate so logits DO change; check local-only model:
+    import dataclasses
+
+    cfg_local = dataclasses.replace(cfg, pattern=("local",), n_layers=2)
+    params_l = lm.init_params(cfg_local, jax.random.PRNGKey(0))
+    l1, _ = lm.forward(cfg_local, params_l, t1)
+    l2, _ = lm.forward(cfg_local, params_l, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, -1]), np.asarray(l2[0, -1]), atol=1e-3
+    )
+
+
+def test_full_configs_match_assignment():
+    a = get("qwen2.5-32b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff, a.vocab) == (
+        64, 5120, 40, 8, 27648, 152064,
+    ) and a.qkv_bias
+    g = get("gemma2-9b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff, g.vocab) == (
+        42, 3584, 16, 8, 14336, 256000,
+    ) and g.logit_softcap == 30.0
+    q3 = get("qwen3-1.7b")
+    assert (q3.n_layers, q3.d_model, q3.d_ff, q3.vocab) == (28, 2048, 6144, 151936)
+    assert q3.qk_norm
+    q15 = get("qwen1.5-110b")
+    assert (q15.n_layers, q15.d_model, q15.n_heads, q15.d_ff) == (80, 8192, 64, 49152)
+    o = get("olmoe-1b-7b")
+    assert (o.moe.num_experts, o.moe.top_k, o.vocab) == (64, 8, 50304)
+    p = get("phi3.5-moe-42b-a6.6b")
+    assert (p.moe.num_experts, p.moe.top_k, p.d_model) == (16, 2, 4096)
+    r = get("recurrentgemma-2b")
+    assert r.n_layers == 26 and r.pattern.count("local") == 8
+    w = get("whisper-base")
+    assert (w.n_layers, w.enc_layers, w.d_model, w.vocab) == (6, 6, 512, 51865)
+    v = get("qwen2-vl-7b")
+    assert (v.n_layers, v.d_model, v.n_heads, v.n_kv_heads, v.d_ff) == (
+        28, 3584, 28, 4, 18944,
+    ) and v.mrope_sections == (16, 24, 24)
+    m = get("mamba2-130m")
+    assert (m.n_layers, m.d_model, m.vocab, m.ssm.d_state) == (24, 768, 50280, 128)
+
+
+def test_all_cells_enumerate_40():
+    from repro.configs.shapes import cells
+
+    allc = list(cells(list_archs()))
+    assert len(allc) == 40
+    skips = [c for c in allc if c[2]]
+    assert len(skips) == 8  # long_500k for the 8 full-attention archs

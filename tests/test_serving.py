@@ -1,0 +1,109 @@
+"""Serving control plane: probe-first admission, two-phase, Airlock ladder,
+and the Absolute Priority Guarantee applied to sequences."""
+
+import numpy as np
+import pytest
+
+from repro.sched.serving import LaminarServingScheduler, ServeConfig
+
+
+def drain(sched, ticks, prefill_latency=1):
+    """Drive the control loop with an ideal data plane: prefill completes
+    after `prefill_latency` ticks, every running seq emits 1 token/tick."""
+    pending = {}  # rid -> completion tick
+    for _ in range(ticks):
+        actions = sched.tick()
+        for rid in actions["prefill"]:
+            pending[rid] = sched.t + prefill_latency
+        done = [r for r, t in pending.items() if t <= sched.t]
+        for rid in done:
+            sched.on_prefill_done(rid)
+            del pending[rid]
+        for ri in range(len(sched.replicas)):
+            for rid in list(sched.running(ri)):
+                sched.on_token(rid)
+    return sched
+
+
+def test_admission_and_completion():
+    sched = LaminarServingScheduler(ServeConfig(), num_replicas=4, seed=0)
+    for i in range(16):
+        sched.submit(prompt_len=64, max_new=8, priority=32.0)
+    drain(sched, 40)
+    assert sched.stats["started"] == 16
+    assert sched.stats["completed"] == 16
+
+
+def test_pages_conserved():
+    cfg = ServeConfig(pages_per_replica=64)
+    sched = LaminarServingScheduler(cfg, num_replicas=2, seed=0)
+    for i in range(24):
+        sched.submit(prompt_len=32, max_new=16, priority=16.0)
+    drain(sched, 120)
+    for rep in sched.replicas:
+        assert rep.pages.free_pages == cfg.pages_per_replica  # all returned
+
+
+def test_routing_spreads_load():
+    sched = LaminarServingScheduler(ServeConfig(), num_replicas=4, seed=1)
+    for i in range(64):
+        sched.submit(prompt_len=64, max_new=4, priority=16.0)
+    counts = np.zeros(4)
+    for req in sched.requests.values():
+        counts[req.replica] += 1
+    assert (counts > 0).all()  # probabilistic splitting, no herding to one
+
+
+def test_absolute_priority_guarantee_under_pressure():
+    """Fill replicas with low-priority seqs, then submit high-priority work:
+    the suspended victims must all be low-priority."""
+    cfg = ServeConfig(
+        pages_per_replica=32, max_slots=4, high_watermark=0.5,
+        safe_watermark=0.3, t_susp=2, t_surv=12,
+    )
+    sched = LaminarServingScheduler(cfg, num_replicas=2, seed=0)
+    low = [sched.submit(prompt_len=64, max_new=64, priority=8.0) for _ in range(6)]
+    drain(sched, 8)
+    high = [sched.submit(prompt_len=64, max_new=8, priority=256.0) for _ in range(4)]
+    drain(sched, 30)
+    suspended_or_worse = [
+        r for r in sched.requests.values()
+        if r.rid in low and r.state in ("suspended", "migrating", "failed")
+    ]
+    high_disturbed = [
+        r for r in sched.requests.values()
+        if r.rid in high and r.state in ("suspended", "migrating")
+    ]
+    assert sched.stats["suspended"] > 0
+    assert not high_disturbed  # high-priority seqs are never the victims
+
+
+def test_airlock_ladder_orders_outcomes():
+    cfg = ServeConfig(
+        pages_per_replica=16, max_slots=2, high_watermark=0.4,
+        safe_watermark=0.2, t_susp=2, t_surv=6,
+    )
+    sched = LaminarServingScheduler(cfg, num_replicas=2, seed=0)
+    for i in range(12):
+        sched.submit(prompt_len=32, max_new=64, priority=float(2 ** (i % 5)))
+    drain(sched, 80)
+    s = sched.stats
+    # ladder engaged: suspensions happened; every terminal outcome is one of
+    # the bounded paths (resume / migrate / reclaim), never silent loss
+    assert s["suspended"] > 0
+    assert s["resumed_insitu"] + s["migrated"] + s["reclaimed"] > 0
+    states = {r.state for r in sched.requests.values()}
+    assert states <= {"queued", "reserved", "running", "suspended", "migrating", "done", "failed"}
+
+
+def test_fastfail_is_bounded():
+    cfg = ServeConfig(pages_per_replica=8, max_slots=1)
+    sched = LaminarServingScheduler(cfg, num_replicas=1, seed=0)
+    for i in range(64):  # far beyond capacity
+        sched.submit(prompt_len=512, max_new=64, priority=2.0)
+    # arbitration rejects one winner per replica per tick; patience
+    # (2 * 36 pages = 72) drains at eval_cost 3 -> ~24 rejections each
+    drain(sched, 64 * 26)
+    s = sched.stats
+    assert s["fastfail"] > 0  # bounded dissipation, not infinite retry
+    assert s["fastfail"] + s["completed"] + s["started"] <= 2 * s["arrived"]

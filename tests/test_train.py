@@ -1,0 +1,158 @@
+"""Training substrate: optimizer, data, checkpoint, FT loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import optimizer as opt
+from repro.train.straggler import StragglerMonitor
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        ocfg = opt.OptConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        st_ = opt.init_opt_state(ocfg, params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}
+            params, st_, _ = opt.adamw_update(ocfg, params, grads, st_)
+        assert float(jnp.sum(params["w"] ** 2)) < 0.5
+
+    def test_clip_norm(self):
+        ocfg = opt.OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        st_ = opt.init_opt_state(ocfg, params)
+        _, _, stats = opt.adamw_update(ocfg, params, {"w": jnp.full(4, 100.0)}, st_)
+        assert float(stats["grad_norm"]) > 1.0  # raw norm reported
+
+    @given(st.lists(st.floats(-10, 10), min_size=2, max_size=32))
+    @settings(max_examples=30, deadline=None)
+    def test_int8_compression_error_bound(self, xs):
+        g = jnp.asarray(xs, jnp.float32)
+        q, s = opt.compress_int8(g)
+        deq = opt.decompress_int8(q, s)
+        # quantization error bounded by half a step
+        assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_preserves_signal(self):
+        """With error feedback, the accumulated applied gradient converges to
+        the true gradient sum (compression bias cancels)."""
+        ocfg = opt.OptConfig(compress_grads=True)
+        g = jnp.asarray([1e-4, 2e-4, -5e-5, 1.0])  # small values vs an outlier
+        err = {"g": jnp.zeros_like(g)}
+        total = jnp.zeros_like(g)
+        for _ in range(50):
+            deq, err = opt.apply_compression(ocfg, {"g": g}, err)
+            total = total + deq["g"]
+        # error feedback bounds the ACCUMULATED deviation by one quantization
+        # step (scale = max|g|/127), independent of the number of rounds —
+        # without it, sub-quantum entries would be lost entirely.
+        quantum = float(jnp.max(jnp.abs(g))) / 127.0
+        np.testing.assert_allclose(
+            np.asarray(total), np.asarray(50 * g), atol=quantum + 1e-6
+        )
+        # and the tiny components did flow (not truncated to zero forever)
+        assert abs(float(total[0]) - 50 * 1e-4) <= quantum
+
+
+class TestData:
+    def test_packing_shapes_and_determinism(self):
+        it1 = data_mod.PackedBatcher(data_mod.SyntheticSource(512, seed=3), 4, 16)
+        it2 = data_mod.PackedBatcher(data_mod.SyntheticSource(512, seed=3), 4, 16)
+        b1 = next(iter(it1))
+        b2 = next(iter(it2))
+        assert b1["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        # labels are next-token shifted
+        np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+    def test_prefetch_delivers(self):
+        it = data_mod.make_pipeline(512, 2, 8, seed=0)
+        batches = [next(it) for _ in range(5)]
+        assert all(b["tokens"].shape == (2, 8) for b in batches)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        ckpt.save(tmp_path / "step_00000005", 5, tree)
+        abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        out = ckpt.restore(tmp_path / "step_00000005", abstract)
+        np.testing.assert_array_equal(out["a"], np.asarray(tree["a"]))
+        np.testing.assert_array_equal(out["b"]["c"], np.asarray(tree["b"]["c"]))
+
+    def test_async_and_gc(self, tmp_path):
+        acp = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+        for step in (1, 2, 3):
+            acp.save_async(step, {"w": jnp.full(3, float(step))})
+        acp.wait()
+        assert ckpt.latest_step(tmp_path) == 3
+        committed = [d for d in tmp_path.iterdir() if (d / "COMMITTED").exists()]
+        assert len(committed) == 2  # gc kept the last two
+
+    def test_uncommitted_is_invisible(self, tmp_path):
+        d = tmp_path / "step_00000009"
+        d.mkdir()
+        (d / "manifest.json").write_text("{}")  # no COMMITTED marker
+        assert ckpt.latest_step(tmp_path) is None
+
+
+class TestStraggler:
+    def test_breaker_trips_on_sustained_slowness(self):
+        mon = StragglerMonitor(threshold=2.0, trip_after=3)
+        for _ in range(5):
+            assert mon.observe(1.0) == "ok"
+        assert mon.observe(3.0) == "straggler"
+        assert mon.observe(3.0) == "straggler"
+        assert mon.observe(3.0) == "tripped"
+
+    def test_transient_spike_absorbed(self):
+        mon = StragglerMonitor(threshold=2.0, trip_after=3)
+        for _ in range(5):
+            mon.observe(1.0)
+        assert mon.observe(5.0) == "straggler"
+        assert mon.observe(1.0) == "ok"  # incident counter reset
+        assert not mon.tripped
+
+
+class TestTrainerE2E:
+    def _mk(self, tmp_path, total_steps=6, fail_at=None):
+        cfg = get_smoke("qwen3-1.7b")
+        mesh = make_mesh((1, 1), ("data", "model"))
+        tcfg = TrainerConfig(
+            total_steps=total_steps, ckpt_every=2, log_every=2,
+            ckpt_dir=str(tmp_path), donate=False,
+            opt=opt.OptConfig(lr=1e-3, warmup_steps=2, total_steps=total_steps),
+        )
+        it = data_mod.make_pipeline(cfg.vocab, batch=2, seq=16, seed=0)
+        inj = (lambda s: s == fail_at) if fail_at is not None else None
+        return Trainer(cfg, tcfg, mesh, it, fail_injector=inj)
+
+    def test_loss_decreases(self, tmp_path):
+        out = self._mk(tmp_path, total_steps=8).run()
+        assert out["steps"] == 8
+        assert np.isfinite(out["losses"]).all()
+        assert out["losses"][-1] < out["losses"][0]
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        t1 = self._mk(tmp_path, total_steps=5)
+        t1.run()
+        t2 = self._mk(tmp_path, total_steps=7)
+        out = t2.run()
+        # resumed at step 4 (last ckpt), ran 4..6
+        assert out["steps"] == 3
+
+    def test_failure_injection_remesh_path(self, tmp_path):
+        out = self._mk(tmp_path, total_steps=6, fail_at=3).run()
+        assert out["steps"] >= 3
+        assert np.isfinite(out["final_loss"])
