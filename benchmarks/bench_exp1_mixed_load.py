@@ -4,29 +4,44 @@ Sweeps offered load rho over {0.4 .. 0.9} for Laminar, Slurm-like, Ray-like
 and Flux-like on the same heterogeneous cluster, bimodal open-loop workload,
 identical network ground rules. Two-phase reservation is disabled for Laminar
 (as in the paper) to isolate hot-path behavior.
+
+All rows are averaged over the same ``NUM_SEEDS`` replicate seeds. Laminar
+executes them as one batched ``vmap``'d scan per rho
+(``LaminarEngine.run_batch``): no Python loop over seeds, one compiled
+program per load point. The baseline cost models loop in Python.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
-from benchmarks.common import bench_cfg, emit, row_str
-from repro.core import LaminarEngine
+from benchmarks.common import bench_cfg, emit, mean_over_seeds, row_str, run_seeds
 from repro.core.baselines import RUNNERS
 
 RHOS = (0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+NUM_SEEDS = 4
 
 
 def run(full: bool = False, seed: int = 0):
     t0 = time.time()
     rows = []
+    seeds = [seed + i for i in range(NUM_SEEDS)]
     for rho in RHOS:
         cfg = bench_cfg(full=full, rho=rho, two_phase=False)
-        lam = LaminarEngine(cfg).run(seed=seed)
+        outs = run_seeds(cfg, seeds)
+        lam = mean_over_seeds(
+            outs,
+            (
+                "start_success_ratio",
+                "start_success_raw",
+                "p50_ms",
+                "p99_ms",
+                "control_us_per_start",
+            ),
+        )
         rows.append(
             {
-                "paradigm": "laminar", "rho": rho,
+                "paradigm": "laminar", "rho": rho, "num_seeds": NUM_SEEDS,
                 "success": lam["start_success_ratio"],
                 "success_raw": lam["start_success_raw"],
                 "p50_ms": lam["p50_ms"], "p99_ms": lam["p99_ms"],
@@ -35,13 +50,19 @@ def run(full: bool = False, seed: int = 0):
         )
         print("  " + row_str(rows[-1], ("paradigm", "rho", "success", "p99_ms")))
         for name, runner in RUNNERS.items():
-            out = runner(cfg, seed=seed, capacity=1 << 15)
+            # same replicate seeds as Laminar so both curves are equally
+            # smoothed estimators (the baselines are cheap cost models
+            # without a batched runner; a Python loop is fine here)
+            bouts = [runner(cfg, seed=sd, capacity=1 << 15) for sd in seeds]
+            bmean = mean_over_seeds(
+                bouts, ("start_success_ratio", "start_success_raw", "p50_ms", "p99_ms")
+            )
             rows.append(
                 {
-                    "paradigm": name, "rho": rho,
-                    "success": out["start_success_ratio"],
-                    "success_raw": out["start_success_raw"],
-                    "p50_ms": out["p50_ms"], "p99_ms": out["p99_ms"],
+                    "paradigm": name, "rho": rho, "num_seeds": NUM_SEEDS,
+                    "success": bmean["start_success_ratio"],
+                    "success_raw": bmean["start_success_raw"],
+                    "p50_ms": bmean["p50_ms"], "p99_ms": bmean["p99_ms"],
                     "control_us": float("nan"),
                 }
             )

@@ -1,24 +1,29 @@
 """§V-A hot-path micro-costs (paper: AVX2 bitmap check 4.02 ns, DA utility
 scoring 13.7 ns, zone aggregation 29.3 ns on a Xeon 8369B).
 
-Measures the amortized per-element cost of our three hot-path ops on this
-host via the pure-jnp reference path (the production CPU path), plus the
-Pallas kernels in interpret mode for parity (interpret mode is a correctness
-harness, not a performance path — TPU timings come from real hardware).
+Two parts:
+
+  * micro: amortized per-element cost of the three hot-path ops through the
+    ``hotpath`` dispatch layer — the jnp reference path (the production CPU
+    path) and the Pallas kernels in interpret mode (a correctness harness,
+    not a performance path — TPU timings come from real hardware);
+  * engine: full ``LaminarEngine`` runs with ``use_pallas`` off vs on,
+    compared tick-for-tick (per-tick counter timeseries must be identical)
+    and timed per tick for both paths.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
-from repro.kernels.bitmap_fit import bitmap_fit_ref
-from repro.kernels.utility_topk import utility_topk_ref
-from repro.kernels.zone_aggregate import zone_aggregate_ref
+from benchmarks.common import bench_cfg, emit
+from repro.core import LaminarEngine, hotpath
+from repro.core.engine import TS_FIELDS, summarize
 
 
 def _time(fn, *args, iters=20):
@@ -31,41 +36,106 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def run(full: bool = False, seed: int = 0):
-    t0 = time.time()
+def _micro(full: bool, seed: int, use_pallas: bool) -> list:
+    """Per-element cost of the three ops via the dispatch layer."""
     rng = np.random.default_rng(seed)
+    cfg = bench_cfg(full=full, use_pallas=use_pallas)
+    mode = "pallas" if use_pallas else "jnp"
     rows = []
 
     N = 65536
     words = jnp.asarray(rng.integers(0, 2**32, size=(N, 2), dtype=np.uint32))
     mass = jnp.asarray(rng.integers(1, 17, size=N).astype(np.int32))
     contig = jnp.asarray(rng.integers(0, 2, size=N).astype(np.int32))
-    f = jax.jit(bitmap_fit_ref)
+    f = jax.jit(lambda *a: hotpath.bitmap_fit(cfg, *a))
     dt = _time(f, words, mass, contig)
-    rows.append({"op": "bitmap_feasibility", "ns_per_elem": dt / N * 1e9, "batch": N})
+    rows.append({"op": "bitmap_feasibility", "mode": mode,
+                 "ns_per_elem": dt / N * 1e9, "batch": N})
 
     P, K = 8192, 8
     s = jnp.asarray(rng.uniform(0, 64, (P, K)).astype(np.float32))
     h = jnp.asarray(rng.uniform(0, 8, (P, K)).astype(np.float32))
     eps = jnp.asarray(rng.normal(0, 0.5, (P, K)).astype(np.float32))
     feas = jnp.asarray(rng.integers(0, 2, (P, K)).astype(np.int32))
-    g = jax.jit(lambda *a: utility_topk_ref(*a, 1.0))
+    g = jax.jit(lambda *a: hotpath.utility_topk(cfg, *a, 1.0))
     dt = _time(g, s, h, eps, feas)
-    rows.append({"op": "utility_scoring", "ns_per_elem": dt / P * 1e9, "batch": P})
+    rows.append({"op": "utility_scoring", "mode": mode,
+                 "ns_per_elem": dt / P * 1e9, "batch": P})
 
     Z, M = 128, 256
     sg = jnp.asarray(rng.uniform(0, 64, (Z, M)).astype(np.float32))
     hg = jnp.asarray(rng.uniform(0, 8, (Z, M)).astype(np.float32))
     mask = jnp.asarray((rng.uniform(size=(Z, M)) < 0.9).astype(np.float32))
-    z = jax.jit(zone_aggregate_ref)
+    z = jax.jit(lambda *a: hotpath.zone_aggregate(cfg, *a))
     dt = _time(z, sg, hg, mask)
-    rows.append({"op": "zone_aggregation", "ns_per_elem": dt / Z * 1e9, "batch": Z})
+    rows.append({"op": "zone_aggregation", "mode": mode,
+                 "ns_per_elem": dt / Z * 1e9, "batch": Z})
+    return rows
+
+
+def _engine_compare(full: bool, seed: int) -> list:
+    """Full engine, jnp vs pallas path, tick-for-tick parity + per-tick cost."""
+    cfg = bench_cfg(full=full, num_nodes=None if full else 256,
+                    horizon_ms=None if full else 400.0)
+    rows, ts_by_mode = [], {}
+    for use_pallas in (False, True):
+        c = dataclasses.replace(cfg, use_pallas=use_pallas)
+        eng = LaminarEngine(c)
+        s, lam = eng.init(seed)
+        runner = eng._runner(lam, c.num_ticks)
+        jax.block_until_ready(runner(s))  # compile + warm
+        t0 = time.perf_counter()
+        final, ts = runner(s)
+        jax.block_until_ready(ts)
+        wall = time.perf_counter() - t0
+        mode = "pallas" if use_pallas else "jnp"
+        ts_by_mode[mode] = np.asarray(ts)
+        out = summarize(c, final, ts_by_mode[mode])
+        rows.append(
+            {
+                "op": "engine_tick", "mode": mode,
+                "us_per_tick": wall / c.num_ticks * 1e6,
+                "ticks": c.num_ticks, "nodes": c.num_nodes,
+                "started": out["started"],
+                "success": out["start_success_ratio"],
+            }
+        )
+    identical = bool(np.array_equal(ts_by_mode["jnp"], ts_by_mode["pallas"]))
+    max_diff = int(np.max(np.abs(
+        ts_by_mode["jnp"].astype(np.int64) - ts_by_mode["pallas"].astype(np.int64)
+    )))
+    for r in rows:
+        r["tick_parity"] = identical
+        r["tick_max_abs_diff"] = max_diff
+    if not identical:
+        fields = ", ".join(
+            f for i, f in enumerate(TS_FIELDS)
+            if not np.array_equal(ts_by_mode["jnp"][:, i], ts_by_mode["pallas"][:, i])
+        )
+        print(f"  WARNING: tick divergence in: {fields}")
+    return rows
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    for use_pallas in (False, True):
+        rows.extend(_micro(full, seed, use_pallas))
+    rows.extend(_engine_compare(full, seed))
 
     for r in rows:
-        print(f"  {r['op']}: {r['ns_per_elem']:.2f} ns/elem (batch {r['batch']})")
+        if "ns_per_elem" in r:
+            print(f"  {r['op']}[{r['mode']}]: {r['ns_per_elem']:.2f} ns/elem "
+                  f"(batch {r['batch']})")
+        else:
+            print(f"  {r['op']}[{r['mode']}]: {r['us_per_tick']:.1f} us/tick "
+                  f"(parity={r['tick_parity']})")
+    jnp_rows = {r["op"]: r for r in rows if r["mode"] == "jnp" and "ns_per_elem" in r}
+    parity = next(r["tick_parity"] for r in rows if r["op"] == "engine_tick")
     emit(
         "hotpath_micro", rows, t0,
-        derived=";".join(f"{r['op']}={r['ns_per_elem']:.2f}ns" for r in rows),
+        derived=";".join(f"{op}={r['ns_per_elem']:.2f}ns" for op, r in jnp_rows.items())
+        + f";tick_parity={parity}",
     )
     return rows
 

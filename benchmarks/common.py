@@ -47,6 +47,24 @@ def bench_cfg(
     )
 
 
+def run_seeds(cfg: LaminarConfig, seeds, num_ticks: int | None = None) -> list:
+    """Run all seeds through ONE compiled ``vmap``'d scan (no Python loop).
+
+    Thin wrapper over ``LaminarEngine.run_batch`` so every benchmark that
+    replicates over seeds amortizes compilation and device dispatch across
+    the whole batch."""
+    from repro.core import LaminarEngine
+
+    return LaminarEngine(cfg).run_batch(seeds, num_ticks=num_ticks)
+
+
+def mean_over_seeds(outs: list, keys) -> dict:
+    """Per-key mean across per-seed summarize() dicts (NaNs propagate)."""
+    import numpy as np
+
+    return {k: float(np.mean([o[k] for o in outs])) for k in keys}
+
+
 def emit(name: str, rows: list, t0: float, derived: str = "") -> None:
     """Print the harness CSV contract + persist the rows as JSON."""
     us = (time.time() - t0) * 1e6

@@ -25,7 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitmap
+from repro.core import bitmap, hotpath
 from repro.core.config import LaminarConfig
 from repro.core.state import (
     ADDRESSING,
@@ -83,12 +83,22 @@ def arbitrate(
     has_w = wslot[:N] >= 0
     ws = jnp.clip(wslot[:N], 0, P - 1)
 
-    # feasibility + first-fit allocation against the TRUE residual bitmap,
-    # computed once per node for its winner's demand
+    # feasibility against the TRUE residual bitmap, computed once per node
+    # for its winner's demand — the paper's 4.02 ns bitmap-check hot op,
+    # routed through the dispatch layer so engine runs exercise (and
+    # benchmarks measure) the same code path as the standalone kernels.
+    # The pallas path runs the word-level kernel on ``s.free`` (kept in
+    # sync with the ``bits`` plane across rounds); the jnp path reuses the
+    # threaded bit plane so no round re-unpacks the words. For winner rows
+    # feas_hot agrees with the allocation routines' internal feasibility
+    # (the parity tests enforce it); the AND is a guard so a kernel
+    # regression could only reject admissions, never reserve a probe with
+    # an empty atom mask.
+    feas_hot = hotpath.bitmap_fit(cfg, s.free, s.mass[ws], s.contig[ws], bits=bits) != 0
     alloc_bits, feas_n = bitmap.alloc_for_class(
         bits, s.mass[ws], s.contig[ws], policy=cfg.alloc_policy
     )
-    feas_n = feas_n & has_w
+    feas_n = feas_n & feas_hot & has_w
     taken = alloc_bits & feas_n[:, None]
     alloc_words_n = bitmap.pack_bits(taken)
     free = s.free & ~alloc_words_n

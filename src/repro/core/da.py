@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import zhaf
+from repro.core import hotpath, zhaf
 from repro.core.config import LaminarConfig
 from repro.core.state import (
     ADDRESSING,
@@ -29,7 +29,7 @@ from repro.core.state import (
     SUSPENDED,
     SimState,
 )
-from repro.core.utility import addressing_score
+from repro.core.utility import unified_utility
 
 
 def _dissipate_st(s: SimState, mask: jax.Array) -> jax.Array:
@@ -125,22 +125,29 @@ def address(
     s_eff = s_eff.at[:, 0].set(view.s_true[here])
     h_eff = h_eff.at[:, 0].set(view.h_true[here])
     run_eff = run_eff.at[:, 0].set(view.run_true[here])
-    score = addressing_score(
-        s_eff, h_eff, cfg.gamma_repulsion, cfg.addr_noise_sigma, k_noise
-    )
     mass_f = s.mass.astype(jnp.float32)[:, None]
     feas = jnp.where(s.contig[:, None], run_eff >= mass_f, s_eff >= mass_f)
-    score = jnp.where(feas, score, -jnp.inf)
+
+    # fused utility scoring + candidate argmax: the paper's 13.7 ns hot-path
+    # op. Symmetry-breaking noise is pre-sampled so kernel and reference see
+    # the same eps (Addr_jk = log2(1+S) - gamma*log2(1+H) + eps, masked).
+    eps = cfg.addr_noise_sigma * jax.random.normal(k_noise, s_eff.shape)
+    best, best_score = hotpath.utility_topk(
+        cfg, s_eff, h_eff, eps, feas, cfg.gamma_repulsion
+    )
 
     any_feas = jnp.any(feas, axis=1)
-    best = jnp.argmax(score, axis=1)
     target = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
 
     # Controlled sub-optimality: a feasible launchpad is "sufficiently good"
     # unless a remote candidate beats it by more than stay_margin bits.
     here_ok = feas[:, 0]
-    here_score = jnp.where(here_ok, score[:, 0], -jnp.inf)
-    prefer_here = here_ok & (score[jnp.arange(score.shape[0]), best] <= here_score + cfg.stay_margin)
+    here_score = jnp.where(
+        here_ok,
+        unified_utility(s_eff[:, 0], h_eff[:, 0], cfg.gamma_repulsion) + eps[:, 0],
+        -jnp.inf,
+    )
+    prefer_here = here_ok & (best_score <= here_score + cfg.stay_margin)
     target = jnp.where(prefer_here, jnp.maximum(s.node, 0), target)
 
     stay = active & any_feas & (target == s.node)

@@ -142,6 +142,10 @@ class SimState(NamedTuple):
     zcount: jax.Array
     zS: jax.Array  # TEG aggregate: mean reported slack
     zH: jax.Array  # TEG aggregate: total reported heat
+    # densified member matrix for the zone_aggregate kernel: zones are
+    # heterogeneous, so (Z, M) node indices (M = max zone size) + validity
+    zmember: jax.Array  # (Z, M) node index per zone slot (0 where invalid)
+    zmask: jax.Array  # (Z, M) validity (f32: 1.0 member, 0.0 padding)
 
     metrics: Metrics
 
@@ -161,6 +165,18 @@ def build_zones(cfg: LaminarConfig, rng: np.random.Generator):
     counts = np.asarray(sizes, np.int32)
     zone_id = np.repeat(np.arange(len(sizes), dtype=np.int32), counts)
     return starts, counts, zone_id
+
+
+def densify_zones(starts: np.ndarray, counts: np.ndarray):
+    """(Z, M) member-index matrix + validity mask for heterogeneous zones.
+
+    Zones are contiguous node ranges, so row z is ``starts[z] + arange(M)``
+    masked at ``counts[z]``; invalid slots point at node 0 (gather-safe)."""
+    M = int(counts.max())
+    lane = np.arange(M, dtype=np.int32)[None, :]
+    mask = lane < counts[:, None]
+    member = np.where(mask, starts[:, None] + lane, 0).astype(np.int32)
+    return member, mask.astype(np.float32)
 
 
 def paint_rigid(cfg: LaminarConfig, rng: np.random.Generator):
@@ -196,6 +212,7 @@ def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
     W = max(1, (cfg.atoms_per_node + 31) // 32)
 
     zstart, zcount, zone_id = build_zones(cfg, rng)
+    zmember, zmask = densify_zones(zstart, zcount)
     Z = len(zcount)
     bits, rigid_atoms = paint_rigid(cfg, rng)
     free_words = np.asarray(bitmap.pack_bits(jnp.asarray(bits)))
@@ -266,5 +283,7 @@ def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
         zcount=i32(zcount),
         zS=f32(zS0),
         zH=f32(zH0),
+        zmember=i32(zmember),
+        zmask=f32(zmask),
         metrics=Metrics.zeros(HIST_BUCKETS),
     )

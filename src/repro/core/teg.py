@@ -14,20 +14,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import hotpath, zhaf
 from repro.core.config import LaminarConfig
 from repro.core.state import ROUTING, SimState
 from repro.core.utility import unified_utility, zone_routing_logits
 
 
 def refresh(cfg: LaminarConfig, s: SimState) -> SimState:
-    """Refresh T_global (zone aggregates) from the Z-HAF reported view."""
+    """Refresh T_global (zone aggregates) from the Z-HAF reported view.
+
+    The segmented reduction is one of the paper's three measured hot-path
+    ops (29.3 ns zone aggregation): the reported view is densified into
+    (Z, M) member tiles and reduced by ``hotpath.zone_aggregate`` (Pallas
+    kernel when ``cfg.use_pallas``, jnp reference otherwise).
+    """
     every = cfg.ticks(cfg.teg_refresh_ms)
     due = (s.t % every) == 0
 
-    Z = len(s.zstart)
-    seg = jnp.zeros((Z,), jnp.float32)
-    zS = seg.at[s.zone_id].add(s.rep_S) / jnp.maximum(s.zcount, 1)
-    zH = seg.at[s.zone_id].add(s.rep_H)
+    s_gather, h_gather, mask = zhaf.zone_gather(cfg, s)
+    zS, zH = hotpath.zone_aggregate(cfg, s_gather, h_gather, mask)
     return s._replace(
         zS=jnp.where(due, zS, s.zS),
         zH=jnp.where(due, zH, s.zH),

@@ -23,18 +23,6 @@ def unified_utility(s_pred: jax.Array, h_pred: jax.Array, gamma: float) -> jax.A
     return log2p1(s_pred) - gamma * log2p1(h_pred)
 
 
-def addressing_score(
-    s_pred: jax.Array,
-    h_pred: jax.Array,
-    gamma: float,
-    noise_sigma: float,
-    key: jax.Array,
-) -> jax.Array:
-    """Addr_j = log2(1+S_pred) - gamma*log2(1+H_pred) + eps,  eps ~ N(0, sigma^2)."""
-    eps = noise_sigma * jax.random.normal(key, s_pred.shape)
-    return unified_utility(s_pred, h_pred, gamma) + eps
-
-
 def zone_routing_logits(zone_utility: jax.Array, temperature: float) -> jax.Array:
     """P(z) = 2^(U_z/tau) / sum_r 2^(U_r/tau)  ==  softmax(U ln2 / tau)."""
     return zone_utility * (jnp.log(2.0) / temperature)

@@ -45,6 +45,16 @@ def build_view(cfg: LaminarConfig, s: SimState) -> NodeView:
     return NodeView(bits, s_true, h_true, run_true)
 
 
+def zone_gather(cfg: LaminarConfig, s: SimState):
+    """Densify the reported per-node view into (Z, M) zone-member tiles.
+
+    This is the gather side of the zone_aggregate hot-path op: the engine
+    feeds these tiles to ``hotpath.zone_aggregate`` (Pallas kernel or jnp
+    reference) instead of scatter-adding over ``zone_id``. Invalid slots
+    gather node 0 and are zeroed by the mask inside the reduction."""
+    return s.rep_S[s.zmember], s.rep_H[s.zmember], s.zmask
+
+
 def report(cfg: LaminarConfig, s: SimState, key: jax.Array, view: NodeView) -> SimState:
     """Fire due node reports (base interval + Gaussian jitter, 1% loss)."""
     k_loss, k_jit = jax.random.split(key)

@@ -14,10 +14,19 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def bitmap_fit(words: jax.Array, mass: jax.Array, contig: jax.Array) -> jax.Array:
+def bitmap_fit(
+    words: jax.Array,
+    mass: jax.Array,
+    contig: jax.Array,
+    interpret: bool | None = None,
+) -> jax.Array:
     """Feasibility (0/1 int32) of each node's demand against its bitmap.
 
     Runs the Pallas kernel natively on TPU; on CPU the kernel body executes
     under ``interpret=True`` (identical semantics, Python-level execution).
+    Pass ``interpret`` explicitly to override the backend auto-detection
+    (the parity tests use this to force interpret mode).
     """
-    return bitmap_fit_pallas(words, mass, contig, interpret=_on_cpu())
+    if interpret is None:
+        interpret = _on_cpu()
+    return bitmap_fit_pallas(words, mass, contig, interpret=interpret)

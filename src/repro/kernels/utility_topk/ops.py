@@ -10,9 +10,13 @@ from repro.kernels.utility_topk.ref import utility_topk_ref
 __all__ = ["utility_topk", "utility_topk_ref"]
 
 
-def utility_topk(s_pred, h_pred, eps, feasible, gamma):
-    """Best candidate per probe under the unified utility field."""
+def utility_topk(s_pred, h_pred, eps, feasible, gamma, interpret: bool | None = None):
+    """Best candidate per probe under the unified utility field.
+
+    ``interpret=None`` auto-selects interpret mode on CPU backends.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     return utility_topk_pallas(
-        s_pred, h_pred, eps, feasible, gamma,
-        interpret=jax.default_backend() == "cpu",
+        s_pred, h_pred, eps, feasible, gamma, interpret=interpret
     )

@@ -10,8 +10,11 @@ from repro.kernels.zone_aggregate.ref import zone_aggregate_ref
 __all__ = ["zone_aggregate", "zone_aggregate_ref"]
 
 
-def zone_aggregate(s_gather, h_gather, mask):
-    """Per-zone (mean slack, total heat) from densified node gathers."""
-    return zone_aggregate_pallas(
-        s_gather, h_gather, mask, interpret=jax.default_backend() == "cpu"
-    )
+def zone_aggregate(s_gather, h_gather, mask, interpret: bool | None = None):
+    """Per-zone (mean slack, total heat) from densified node gathers.
+
+    ``interpret=None`` auto-selects interpret mode on CPU backends.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return zone_aggregate_pallas(s_gather, h_gather, mask, interpret=interpret)

@@ -1,0 +1,47 @@
+"""Optional-`hypothesis` shim: degrade property tests to skips when absent.
+
+The tier-1 suite must collect and run in environments without the
+``hypothesis`` dev dependency (see requirements-dev.txt). Importing
+``given``/``settings``/``st`` from here instead of ``hypothesis`` keeps the
+non-property tests in the same modules runnable: when hypothesis is missing,
+``@given`` rewrites the test into an explicit skip rather than aborting the
+whole collection with ``ModuleNotFoundError``.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accept any strategy-construction call at decoration time."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _StrategyStub()

@@ -3,8 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.bitmap_fit import bitmap_fit, bitmap_fit_ref
 from repro.kernels.utility_topk import utility_topk, utility_topk_ref

@@ -120,10 +120,12 @@ class TestDryRunSubprocess:
         )
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src")
-        env.pop("JAX_PLATFORMS", None)
+        # forced host devices are a CPU-platform feature: pin the platform so
+        # the subprocess doesn't burn a minute probing for TPU/GPU backends
+        env["JAX_PLATFORMS"] = "cpu"
         out = subprocess.run(
             [sys.executable, "-c", code], capture_output=True, text=True,
-            env=env, timeout=420,
+            env=env, timeout=600,
         )
         assert out.returncode == 0, out.stderr[-2000:]
         rec = json.loads(out.stdout.strip().splitlines()[-1])
