@@ -1,15 +1,19 @@
 """§V-A hot-path micro-costs (paper: AVX2 bitmap check 4.02 ns, DA utility
-scoring 13.7 ns, zone aggregation 29.3 ns on a Xeon 8369B).
+scoring 13.7 ns, zone aggregation 29.3 ns on a Xeon 8369B) plus the fused
+Airlock survival scan (§III-G/H/I, not in the paper's table — it fuses the
+per-tick pressure/victim/transition chain into one pass over the probe table).
 
 Two parts:
 
-  * micro: amortized per-element cost of the three hot-path ops through the
+  * micro: amortized per-element cost of the four hot-path ops through the
     ``hotpath`` dispatch layer — the jnp reference path (the production CPU
-    path) and the Pallas kernels in interpret mode (a correctness harness,
-    not a performance path — TPU timings come from real hardware);
-  * engine: full ``LaminarEngine`` runs with ``use_pallas`` off vs on,
-    compared tick-for-tick (per-tick counter timeseries must be identical)
-    and timed per tick for both paths.
+    path) and the Pallas kernels (native on TPU/GPU; interpret mode on CPU —
+    a correctness harness, not a performance path, so interpret timings are
+    reported for completeness, not compared);
+  * engine: full ``LaminarEngine`` Exp5-style runs (memory dynamics +
+    Airlock on, so the survival scan sits on the measured path) with
+    ``use_pallas`` off vs on, compared tick-for-tick (per-tick counter
+    timeseries must be identical) and timed per tick for both paths.
 """
 
 from __future__ import annotations
@@ -22,8 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_cfg, emit
-from repro.core import LaminarEngine, hotpath
+from repro.core import LaminarEngine, MemoryConfig, hotpath
 from repro.core.engine import TS_FIELDS, summarize
+from repro.core.state import RUNNING, SUSPENDED, init_state
 
 
 def _time(fn, *args, iters=20):
@@ -37,7 +42,7 @@ def _time(fn, *args, iters=20):
 
 
 def _micro(full: bool, seed: int, use_pallas: bool) -> list:
-    """Per-element cost of the three ops via the dispatch layer."""
+    """Per-element cost of the four ops via the dispatch layer."""
     rng = np.random.default_rng(seed)
     cfg = bench_cfg(full=full, use_pallas=use_pallas)
     mode = "pallas" if use_pallas else "jnp"
@@ -70,13 +75,55 @@ def _micro(full: bool, seed: int, use_pallas: bool) -> list:
     dt = _time(z, sg, hg, mask)
     rows.append({"op": "zone_aggregation", "mode": mode,
                  "ns_per_elem": dt / Z * 1e9, "batch": Z})
+
+    # fused Airlock survival scan over a synthetically occupied probe table
+    scfg = dataclasses.replace(
+        cfg, airlock=True, memory=MemoryConfig(enabled=True)
+    )
+    sim = _occupied_state(scfg, rng)
+    P = sim.st.shape[0]
+    w = jax.jit(lambda st: hotpath.survival_scan(scfg, st))
+    dt = _time(w, sim)
+    rows.append({"op": "survival_scan", "mode": mode,
+                 "ns_per_elem": dt / P * 1e9, "batch": P})
     return rows
 
 
+def _occupied_state(cfg, rng):
+    """A mid-run-looking probe table: residents, glass-state, migrations."""
+    s = init_state(cfg, 0)
+    P = cfg.probe_capacity
+    N = cfg.num_nodes
+    st = rng.choice(
+        [0, RUNNING, SUSPENDED], size=P, p=[0.45, 0.45, 0.10]
+    ).astype(np.int32)
+    occupied = st != 0
+    return s._replace(
+        t=jnp.asarray(400, jnp.int32),
+        st=jnp.asarray(st),
+        alloc_node=jnp.asarray(
+            np.where(occupied, rng.integers(0, N, P), -1).astype(np.int32)
+        ),
+        mem=jnp.asarray(
+            (occupied * rng.uniform(0.0, 0.15, P)).astype(np.float32)
+        ),
+        ev=jnp.asarray(rng.choice([24.0, 48.0, 96.0, 256.0], P).astype(np.float32)),
+        migrating=jnp.asarray((st == SUSPENDED) & (rng.uniform(size=P) < 0.3)),
+        susp_tick=jnp.asarray(rng.integers(0, 400, P).astype(np.int32)),
+        surv_deadline=jnp.asarray(rng.integers(100, 800, P).astype(np.int32)),
+        amb=jnp.asarray(rng.uniform(0.0, 0.5, N).astype(np.float32)),
+    )
+
+
 def _engine_compare(full: bool, seed: int) -> list:
-    """Full engine, jnp vs pallas path, tick-for-tick parity + per-tick cost."""
+    """Full engine, jnp vs pallas path, tick-for-tick parity + per-tick cost.
+
+    Exp5-style config (memory dynamics + Airlock on) so all four dispatched
+    ops — including the fused survival scan — sit on the measured tick path.
+    """
     cfg = bench_cfg(full=full, num_nodes=None if full else 256,
-                    horizon_ms=None if full else 400.0)
+                    horizon_ms=None if full else 400.0,
+                    memory=MemoryConfig(enabled=True), airlock=True)
     rows, ts_by_mode = [], {}
     for use_pallas in (False, True):
         c = dataclasses.replace(cfg, use_pallas=use_pallas)

@@ -1,0 +1,49 @@
+"""Fail CI when markdown cross-references point at missing files.
+
+Scans README.md and docs/*.md for relative markdown links — ``[text](path)``
+— and verifies each target exists in the repo (anchors are stripped; external
+``http(s)://`` / ``mailto:`` links are ignored). Exit 1 with a listing of
+every broken reference, so a renamed doc or benchmark cannot leave dangling
+links behind.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def local_targets(md: Path):
+    for m in LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    broken = []
+    for md in docs:
+        if not md.exists():
+            continue
+        for target in local_targets(md):
+            if not (md.parent / target).exists():
+                broken.append(f"{md.relative_to(ROOT)}: ({target})")
+    if broken:
+        print("broken doc links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"doc links ok across {len(docs)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

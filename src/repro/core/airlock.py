@@ -13,6 +13,12 @@ blind kernel OOM destruction:
 With Airlock disabled the model reproduces kernel-OOM behavior: above the kill
 watermark the largest-memory resident is destroyed outright (the linux badness
 heuristic), which is precisely what indiscriminately kills L-tasks.
+
+The per-tick *decision* — per-node pressure accumulation, extreme-victim
+selection, and the resume/reactivate/expire transition masks — is one fused
+op (``hotpath.survival_scan``: pure-jnp reference or the Pallas
+``survival_scan`` kernel, selected by ``cfg.use_pallas``). This module owns
+the *application* of that decision to the state table and the metrics.
 """
 
 from __future__ import annotations
@@ -25,30 +31,6 @@ import jax.numpy as jnp
 from repro.core.config import LaminarConfig
 from repro.core.state import EMPTY, RUNNING, SUSPENDED, SimState
 from repro.core.arbiter import _free_atoms_at
-
-
-def _resident_mask(s: SimState) -> jax.Array:
-    return s.st == RUNNING
-
-
-def _suspended_mask(s: SimState) -> jax.Array:
-    return s.st == SUSPENDED
-
-
-def node_pressure(cfg: LaminarConfig, s: SimState) -> jax.Array:
-    """Physical memory watermark per node (fraction of capacity)."""
-    mem = jnp.where(
-        _resident_mask(s),
-        s.mem,
-        jnp.where(
-            _suspended_mask(s) | (s.migrating & (s.alloc_node >= 0)),
-            s.mem * cfg.memory.suspended_residual,
-            0.0,
-        ),
-    )
-    tgt = jnp.where(s.alloc_node >= 0, s.alloc_node, cfg.num_nodes)
-    res = jnp.zeros((cfg.num_nodes + 1,), jnp.float32).at[tgt].add(mem)
-    return s.rigid_mem + res[:-1] + s.amb
 
 
 def memory_dynamics(cfg: LaminarConfig, s: SimState, key: jax.Array) -> SimState:
@@ -73,38 +55,21 @@ def memory_dynamics(cfg: LaminarConfig, s: SimState, key: jax.Array) -> SimState
     return s._replace(amb=amb)
 
 
-def _per_node_extreme(
-    cfg: LaminarConfig, s: SimState, candidate: jax.Array, score: jax.Array
-):
-    """Pick, per node, the candidate probe with the max ``score`` (use negated
-    score for min). Returns victim mask (one probe per node at most)."""
-    P = s.st.shape[0]
-    N = cfg.num_nodes
-    slot = jnp.arange(P, dtype=jnp.float32)
-    uscore = jnp.where(candidate, score * 1e4 + slot * 1e-3, -jnp.inf)
-    tgt = jnp.where(candidate, s.alloc_node, N)
-    best = jnp.full((N + 1,), -jnp.inf, jnp.float32).at[tgt].max(uscore)
-    return candidate & (uscore == best[jnp.clip(s.alloc_node, 0, N)]) & jnp.isfinite(
-        uscore
-    )
-
-
 def runtime_control(
-    cfg: LaminarConfig, s: SimState, pressure: jax.Array
+    cfg: LaminarConfig, s: SimState, victim: jax.Array
 ) -> SimState:
-    """Per-node survival action under acute pressure (one action/node/tick)."""
-    mc = cfg.memory
-    if not mc.enabled:
+    """Apply the per-node survival action (one action/node/tick).
+
+    ``victim`` comes from ``hotpath.survival_scan``: the largest-memory
+    resident above the kill watermark (kernel OOM) or the lowest-E_v resident
+    above the high watermark (Airlock).
+    """
+    if not cfg.memory.enabled:
         return s
 
     if not cfg.airlock:
-        # kernel OOM: above kill watermark, destroy the largest resident
-        # (badness ~ memory footprint) -- indiscriminate, kills L-tasks.
-        over = pressure > mc.kill_watermark
-        cand = _resident_mask(s) & over[jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)] & (
-            s.alloc_node >= 0
-        )
-        victim = _per_node_extreme(cfg, s, cand, s.mem)
+        # kernel OOM: destroy outright (badness ~ memory footprint) --
+        # indiscriminate, kills L-tasks.
         free = _free_atoms_at(s.free, s.alloc, s.alloc_node, victim)
         m = s.metrics
         m = m._replace(
@@ -121,11 +86,6 @@ def runtime_control(
         )
 
     # Airlock: reverse-recursive suspension, ascending E_v (lowest value first)
-    over = pressure > mc.high_watermark
-    cand = _resident_mask(s) & over[jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)] & (
-        s.alloc_node >= 0
-    )
-    victim = _per_node_extreme(cfg, s, cand, -s.ev)
     m = s.metrics
     m = m._replace(
         suspended_cnt=m.suspended_cnt + jnp.sum(victim.astype(jnp.int32))
@@ -139,46 +99,39 @@ def runtime_control(
 
 
 def airlock_transitions(
-    cfg: LaminarConfig, s: SimState, pressure: jax.Array
+    cfg: LaminarConfig,
+    s: SimState,
+    resume: jax.Array,
+    react: jax.Array,
+    expire: jax.Array,
 ) -> Tuple[SimState, jax.Array]:
-    """In-situ resume / threshold-triggered reactivation / survival expiry.
+    """Apply in-situ resume / threshold-triggered reactivation / survival
+    expiry masks (from ``hotpath.survival_scan``).
 
     Returns (state, reactivation_dispatch_mask) -- reactivated DAs re-enter the
-    network through TEG exactly like fresh probes (§III-D).
+    network through TEG exactly like fresh probes (§III-D). The masks were
+    computed on the post-suspension view of the table, so they compose with
+    ``runtime_control`` exactly like the sequential ladder:
+
+      1) in-situ recovery below the safe watermark (only if no reactivation
+         yet — resume has priority over reactivation for fresh glass-state);
+      2) threshold-triggered secondary reactivation beyond T_susp, granting a
+         fresh E_patience budget and the shared survival TTL T_surv;
+      3) shared TTL expiry: bounded reclamation of task + DA, freeing both
+         the primary allocation and any destination reservation. Applies to
+         ANY migrating incarnation (probing, queued, reserved at a
+         destination, or back in glass-state after a failed attempt).
     """
     if not (cfg.memory.enabled and cfg.airlock):
         return s, jnp.zeros_like(s.migrating)
-
-    susp = _suspended_mask(s)
-    node_ok = pressure < cfg.memory.safe_watermark
-    at_node = jnp.clip(s.alloc_node, 0, cfg.num_nodes - 1)
-
-    # 1) in-situ recovery before threshold (only if no reactivation yet)
-    resume = susp & ~s.migrating & node_ok[at_node] & (s.alloc_node >= 0)
-
-    # 2) threshold-triggered secondary reactivation
-    age = s.t - s.susp_tick
-    react = (
-        susp
-        & ~s.migrating
-        & ~resume
-        & (age > cfg.ticks(cfg.t_susp_ms))
-    )
 
     st = jnp.where(resume, RUNNING, s.st)
     migrating = jnp.where(react, True, s.migrating)
     patience = jnp.where(react, s.ev, s.patience)  # fresh E_patience budget
     surv_deadline = jnp.where(react, s.t + cfg.ticks(cfg.t_surv_ms), s.surv_deadline)
 
-    # 3) shared survival TTL expiry: bounded reclamation of task + DA.
-    # Applies to ANY migrating incarnation (probing, queued, reserved at a
-    # destination, or back in glass-state after a failed attempt).
-    expire = (s.migrating | migrating) & (s.t > jnp.where(react, surv_deadline, s.surv_deadline)) & (
-        s.st != EMPTY
-    ) & (s.st != RUNNING)
     free = _free_atoms_at(s.free, s.alloc, s.alloc_node, expire)
     free = _free_atoms_at(free, s.alloc2, s.node2, expire & (s.node2 >= 0))
-
     st = jnp.where(expire, EMPTY, st)
 
     m = s.metrics

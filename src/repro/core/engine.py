@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import airlock, arbiter, da, teg, workload, zhaf
+from repro.core import airlock, arbiter, da, hotpath, teg, workload, zhaf
 from repro.core.config import LaminarConfig
 from repro.core.state import (
     EMPTY,
@@ -125,9 +125,11 @@ def make_step(cfg: LaminarConfig, lam_per_tick: float):
         # ---- runtime survival (Exp5) ---------------------------------------
         if cfg.memory.enabled:
             s = airlock.memory_dynamics(cfg, s, ks[1])
-            pressure = airlock.node_pressure(cfg, s)
-            s = airlock.runtime_control(cfg, s, pressure)
-            s, react_mask = airlock.airlock_transitions(cfg, s, pressure)
+            # one fused pass over the probe table: pressure + victim +
+            # transition masks (jnp reference or Pallas survival_scan kernel)
+            pressure, victim, resume, react, expire = hotpath.survival_scan(cfg, s)
+            s = airlock.runtime_control(cfg, s, victim)
+            s, react_mask = airlock.airlock_transitions(cfg, s, resume, react, expire)
         else:
             pressure = jnp.zeros((cfg.num_nodes,), jnp.float32)
             react_mask = jnp.zeros_like(s.migrating)

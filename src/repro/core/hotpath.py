@@ -1,10 +1,12 @@
-"""Hot-path kernel dispatch: route the three measured ops through Pallas.
+"""Hot-path kernel dispatch: route the measured ops through Pallas.
 
 The paper micro-optimizes three control-plane operations (§V-A): bitmap
 feasibility (4.02 ns), DA utility scoring (13.7 ns) and zone aggregation
-(29.3 ns). This module is the single switch point between the pure-jnp
-reference implementations (`repro.kernels.*.ref`) and their Pallas kernels
-(`repro.kernels.*.kernel`):
+(29.3 ns); the fourth op fuses Airlock's per-tick survival ladder (§III-G/H/I
+— pressure accumulation, extreme-victim selection, transition masks) into a
+single pass over the probe table. This module is the single switch point
+between the pure-jnp reference implementations (`repro.kernels.*.ref`) and
+their Pallas kernels (`repro.kernels.*.kernel`):
 
   * ``cfg.use_pallas = False`` (default) — pure-jnp references, the
     portable CPU path.
@@ -15,9 +17,9 @@ reference implementations (`repro.kernels.*.ref`) and their Pallas kernels
 ``cfg.use_pallas`` is a *static* config field, so the branch is resolved at
 trace time and the jitted tick function specializes to exactly one path —
 there is no runtime dispatch cost. Engine call sites (``arbiter``, ``da``,
-``teg``) go through this module only; a kernel optimization is therefore a
-one-file change that the parity tests and ``bench_hotpath`` pick up
-automatically.
+``teg``, ``airlock``/``engine`` for the survival scan) go through this
+module only; a kernel optimization is therefore a one-file change that the
+parity tests and ``bench_hotpath`` pick up automatically.
 """
 
 from __future__ import annotations
@@ -26,12 +28,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitmap as _bitmap
+from repro.core import state as _state
 from repro.core.config import LaminarConfig
 from repro.kernels.bitmap_fit import ops as _bitmap_ops
+from repro.kernels.survival_scan import ops as _surv_ops
+from repro.kernels.survival_scan import ref as _surv_ref
 from repro.kernels.utility_topk import ops as _topk_ops
 from repro.kernels.zone_aggregate import ops as _agg_ops
 
-__all__ = ["bitmap_fit", "utility_topk", "zone_aggregate"]
+__all__ = ["bitmap_fit", "survival_scan", "utility_topk", "zone_aggregate"]
+
+# the survival_scan kernel package hardcodes the state-machine codes to stay
+# importable without repro.core; fail loudly here if they ever drift
+assert (_surv_ref.EMPTY, _surv_ref.RUNNING, _surv_ref.SUSPENDED) == (
+    _state.EMPTY,
+    _state.RUNNING,
+    _state.SUSPENDED,
+), "survival_scan state codes out of sync with repro.core.state"
 
 
 def bitmap_fit(
@@ -81,3 +94,36 @@ def zone_aggregate(
     if cfg.use_pallas:
         return _agg_ops.zone_aggregate(s_gather, h_gather, mask)
     return _agg_ops.zone_aggregate_ref(s_gather, h_gather, mask)
+
+
+def survival_scan(cfg: LaminarConfig, s):
+    """Fused per-tick survival decision over the probe table (§III-G/H/I).
+
+    Takes the full ``SimState`` (the op consumes eight of its columns) and
+    returns ``(pressure (N,), victim, resume, react, expire)``. The victim is
+    the per-node extreme — largest memory under kernel OOM, lowest E_v under
+    Airlock — and the transition masks are empty when ``cfg.airlock`` is off.
+    """
+    mc = cfg.memory
+    args = (
+        s.st,
+        s.alloc_node,
+        s.mem,
+        s.ev,
+        s.migrating,
+        s.susp_tick,
+        s.surv_deadline,
+        s.rigid_mem + s.amb,
+        s.t,
+    )
+    kw = dict(
+        airlock=cfg.airlock,
+        residual=mc.suspended_residual,
+        watermark=mc.high_watermark if cfg.airlock else mc.kill_watermark,
+        safe=mc.safe_watermark,
+        t_susp=cfg.ticks(cfg.t_susp_ms),
+        t_surv=cfg.ticks(cfg.t_surv_ms),
+    )
+    if cfg.use_pallas:
+        return _surv_ops.survival_scan(*args, **kw)
+    return _surv_ops.survival_scan_ref(*args, **kw)

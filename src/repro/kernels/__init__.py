@@ -10,13 +10,16 @@ over the (8, 128) vector lanes with explicit VMEM tiling:
   * :mod:`repro.kernels.utility_topk`  — fused utility scoring + candidate
     argmax over the projected Z-HAF field
   * :mod:`repro.kernels.zone_aggregate`— segmented Zone slack/heat reduction
+  * :mod:`repro.kernels.survival_scan` — fused Airlock survival ladder
+    (pressure accumulation + victim selection + transition masks, §III-G/H/I)
 
 Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd wrapper; interpret=True on CPU), ``ref.py`` (pure-jnp oracle).
 """
 
 from repro.kernels.bitmap_fit import ops as bitmap_fit
+from repro.kernels.survival_scan import ops as survival_scan
 from repro.kernels.utility_topk import ops as utility_topk
 from repro.kernels.zone_aggregate import ops as zone_aggregate
 
-__all__ = ["bitmap_fit", "utility_topk", "zone_aggregate"]
+__all__ = ["bitmap_fit", "survival_scan", "utility_topk", "zone_aggregate"]

@@ -1,0 +1,3 @@
+from repro.kernels.survival_scan.ops import survival_scan, survival_scan_ref
+
+__all__ = ["survival_scan", "survival_scan_ref"]

@@ -1,0 +1,262 @@
+"""Pallas TPU kernel: fused Airlock survival ladder scan (§III-G/H/I, Exp5).
+
+One ``pallas_call`` walks the probe table and produces the complete per-tick
+survival decision that `repro.core.airlock` previously assembled from a chain
+of separate segment-scatter, argmax and mask sweeps:
+
+  * per-node pressure accumulation (effective memory of residents, compressed
+    glass-state residuals and in-flight migrations, on top of rigid + ambient),
+  * per-node extreme-victim selection — max memory under kernel OOM,
+    min E_v under Airlock — as a lexicographic (score, slot) argmax,
+  * the resume / reactivate / expire transition masks on the post-victim view.
+
+Layout: the probe table is tiled into ``BLOCK_P`` slabs on the sublane axis;
+the node-level accumulators (pressure, best score, best slot) are small
+(N <= a few thousand) and live as whole-array VMEM blocks with a constant
+index map, so they persist across the entire grid. The grid is
+``(4, P/BLOCK_P)``: three reduction phases that revisit every probe slab
+(pressure, best score, best slot — the lexicographic stages cannot collapse,
+the slot max is only meaningful against the *final* score max) and one
+elementwise phase that emits the probe masks. Scatter accumulation runs in
+probe-slot order, so the blocked kernel reproduces the reference scatter-add
+float-for-float; the max stages are exact regardless of blocking.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.survival_scan.ref import EMPTY, RUNNING, SUSPENDED
+
+BLOCK_P = 512
+
+
+def _scan_kernel(
+    t_ref,
+    st_ref,
+    node_ref,
+    mem_ref,
+    ev_ref,
+    mig_ref,
+    stick_ref,
+    sdl_ref,
+    base_ref,
+    press_ref,
+    bsc_ref,
+    bslot_ref,
+    victim_ref,
+    resume_ref,
+    react_ref,
+    expire_ref,
+    *,
+    N: int,
+    airlock: bool,
+    residual: float,
+    watermark: float,
+    safe: float,
+    t_susp: int,
+    t_surv: int,
+):
+    ph = pl.program_id(0)
+    j = pl.program_id(1)
+
+    st = st_ref[...]
+    node = node_ref[...]
+    valid = node >= 0
+    node_c = jnp.clip(node, 0, N - 1)
+    tgt = jnp.where(valid, node, N)  # OOB rows dropped by the scatters
+    resident = st == RUNNING
+
+    @pl.when(ph == 0)
+    def _pressure():
+        @pl.when(j == 0)
+        def _():
+            press_ref[...] = base_ref[...]
+
+        mem = mem_ref[...]
+        susp = st == SUSPENDED
+        mig = mig_ref[...] != 0
+        mem_eff = jnp.where(
+            resident,
+            mem,
+            jnp.where(susp | (mig & valid), mem * residual, 0.0),
+        )
+        press_ref[...] = press_ref[...].at[tgt].add(mem_eff, mode="drop")
+
+    def candidate_score():
+        over = press_ref[...][node_c] > watermark
+        cand = resident & over & valid
+        score = -ev_ref[...] if airlock else mem_ref[...]
+        return cand, jnp.where(cand, score, -jnp.inf)
+
+    @pl.when(ph == 1)
+    def _best_score():
+        @pl.when(j == 0)
+        def _():
+            bsc_ref[...] = jnp.full((N,), -jnp.inf, jnp.float32)
+
+        _, sc = candidate_score()
+        bsc_ref[...] = bsc_ref[...].at[tgt].max(sc, mode="drop")
+
+    def toppers():
+        cand, sc = candidate_score()
+        return cand & (sc == bsc_ref[...][node_c]) & jnp.isfinite(sc)
+
+    def slots():
+        return j * BLOCK_P + jnp.arange(BLOCK_P, dtype=jnp.int32)
+
+    @pl.when(ph == 2)
+    def _best_slot():
+        @pl.when(j == 0)
+        def _():
+            bslot_ref[...] = jnp.full((N,), -1, jnp.int32)
+
+        top = toppers()
+        bslot_ref[...] = (
+            bslot_ref[...]
+            .at[jnp.where(top, node, N)]
+            .max(jnp.where(top, slots(), -1), mode="drop")
+        )
+
+    @pl.when(ph == 3)
+    def _masks():
+        top = toppers()
+        victim = top & (slots() == bslot_ref[...][node_c])
+        victim_ref[...] = victim.astype(jnp.int32)
+
+        if not airlock:
+            zeros = jnp.zeros_like(st)
+            resume_ref[...] = zeros
+            react_ref[...] = zeros
+            expire_ref[...] = zeros
+            return
+
+        t = t_ref[0]
+        st_rc = jnp.where(victim, SUSPENDED, st)
+        mig_rc = (mig_ref[...] != 0) & ~victim
+        stick_rc = jnp.where(victim, t, stick_ref[...])
+
+        node_ok = press_ref[...][node_c] < safe
+        glass = (st_rc == SUSPENDED) & ~mig_rc
+        resume = glass & node_ok & valid
+        react = glass & ~resume & ((t - stick_rc) > t_susp)
+        deadline = jnp.where(react, t + t_surv, sdl_ref[...])
+        expire = (
+            (mig_rc | react)
+            & (t > deadline)
+            & (st_rc != EMPTY)
+            & (st_rc != RUNNING)
+        )
+        resume_ref[...] = resume.astype(jnp.int32)
+        react_ref[...] = react.astype(jnp.int32)
+        expire_ref[...] = expire.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "airlock", "residual", "watermark", "safe", "t_susp", "t_surv",
+        "interpret",
+    ),
+)
+def survival_scan_pallas(
+    st: jax.Array,  # (P,) i32
+    alloc_node: jax.Array,  # (P,) i32
+    mem: jax.Array,  # (P,) f32
+    ev: jax.Array,  # (P,) f32
+    migrating: jax.Array,  # (P,) bool
+    susp_tick: jax.Array,  # (P,) i32
+    surv_deadline: jax.Array,  # (P,) i32
+    base: jax.Array,  # (N,) f32 rigid + ambient
+    t: jax.Array,  # () i32 current tick
+    airlock: bool,
+    residual: float,
+    watermark: float,
+    safe: float,
+    t_susp: int,
+    t_surv: int,
+    interpret: bool = False,
+):
+    """Returns (pressure (N,) f32, victim, resume, react, expire (P,) bool)."""
+    P = st.shape[0]
+    N = base.shape[0]
+    pad = (-P) % BLOCK_P
+    if pad:
+        # padded rows: EMPTY state, no allocation — inert in every phase
+        st = jnp.pad(st, (0, pad))
+        alloc_node = jnp.pad(alloc_node, (0, pad), constant_values=-1)
+        mem = jnp.pad(mem, (0, pad))
+        ev = jnp.pad(ev, (0, pad))
+        migrating = jnp.pad(migrating.astype(jnp.int32), (0, pad))
+        susp_tick = jnp.pad(susp_tick, (0, pad))
+        surv_deadline = jnp.pad(surv_deadline, (0, pad))
+    Pp = P + pad
+
+    probe_spec = pl.BlockSpec((BLOCK_P,), lambda ph, j: (j,))
+    node_spec = pl.BlockSpec((N,), lambda ph, j: (0,))
+
+    kernel = functools.partial(
+        _scan_kernel,
+        N=N,
+        airlock=airlock,
+        residual=residual,
+        watermark=watermark,
+        safe=safe,
+        t_susp=t_susp,
+        t_surv=t_surv,
+    )
+    pressure, _, _, victim, resume, react, expire = pl.pallas_call(
+        kernel,
+        grid=(4, Pp // BLOCK_P),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # t
+            probe_spec,  # st
+            probe_spec,  # alloc_node
+            probe_spec,  # mem
+            probe_spec,  # ev
+            probe_spec,  # migrating
+            probe_spec,  # susp_tick
+            probe_spec,  # surv_deadline
+            node_spec,  # base
+        ],
+        out_specs=[
+            node_spec,  # pressure (accumulated across phase 0)
+            node_spec,  # best score (phase 1)
+            node_spec,  # best slot (phase 2)
+            probe_spec,  # victim
+            probe_spec,  # resume
+            probe_spec,  # react
+            probe_spec,  # expire
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((Pp,), jnp.int32),
+            jax.ShapeDtypeStruct((Pp,), jnp.int32),
+            jax.ShapeDtypeStruct((Pp,), jnp.int32),
+            jax.ShapeDtypeStruct((Pp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(t, jnp.int32).reshape(1),
+        st.astype(jnp.int32),
+        alloc_node.astype(jnp.int32),
+        mem.astype(jnp.float32),
+        ev.astype(jnp.float32),
+        migrating.astype(jnp.int32),
+        susp_tick.astype(jnp.int32),
+        surv_deadline.astype(jnp.int32),
+        base.astype(jnp.float32),
+    )
+    return (
+        pressure,
+        victim[:P] != 0,
+        resume[:P] != 0,
+        react[:P] != 0,
+        expire[:P] != 0,
+    )

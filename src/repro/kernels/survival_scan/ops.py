@@ -1,0 +1,55 @@
+"""Public op: fused Airlock survival ladder scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.survival_scan.kernel import survival_scan_pallas
+from repro.kernels.survival_scan.ref import survival_scan_ref
+
+__all__ = ["survival_scan", "survival_scan_ref"]
+
+
+def survival_scan(
+    st,
+    alloc_node,
+    mem,
+    ev,
+    migrating,
+    susp_tick,
+    surv_deadline,
+    base,
+    t,
+    *,
+    airlock: bool,
+    residual: float,
+    watermark: float,
+    safe: float,
+    t_susp: int,
+    t_surv: int,
+    interpret: bool | None = None,
+):
+    """Per-tick survival decision: (pressure, victim, resume, react, expire).
+
+    ``interpret=None`` auto-selects interpret mode on CPU backends.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return survival_scan_pallas(
+        st,
+        alloc_node,
+        mem,
+        ev,
+        migrating,
+        susp_tick,
+        surv_deadline,
+        base,
+        t,
+        airlock=airlock,
+        residual=residual,
+        watermark=watermark,
+        safe=safe,
+        t_susp=t_susp,
+        t_surv=t_surv,
+        interpret=interpret,
+    )

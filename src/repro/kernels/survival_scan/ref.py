@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the survival_scan kernel.
+
+This is also the production CPU path: ``hotpath.survival_scan`` routes here
+when ``cfg.use_pallas`` is off. The Pallas kernel must reproduce these floats
+bit-for-bit in interpret mode (enforced by ``tests/test_hotpath.py`` on a
+full Exp5 engine run), so the two implementations share the exact same
+operation structure:
+
+  * pressure: one ``scatter-add`` of effective memory onto ``base``
+    (rigid + ambient), in probe-slot order;
+  * victim: lexicographic per-node argmax of ``(score, slot)`` via two exact
+    scatter-max passes — float max is associative, so blocking cannot change
+    the result, and the integer slot stage makes ties exact (no float
+    composite key);
+  * transition masks: elementwise on the post-victim view of the table.
+
+State-machine codes are passed in by the caller (``hotpath``) rather than
+imported from ``repro.core.state`` — the kernels package must stay importable
+without touching ``repro.core`` (which imports back into ``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# repro.core.state machine codes, duplicated to keep this package
+# core-import-free; tests/test_survival_scan.py asserts they stay in sync.
+EMPTY = 0
+RUNNING = 6
+SUSPENDED = 7
+
+
+def survival_scan_ref(
+    st: jax.Array,  # (P,) i32 probe state-machine code
+    alloc_node: jax.Array,  # (P,) i32 node holding the primary allocation (-1 none)
+    mem: jax.Array,  # (P,) f32 true physical memory while resident
+    ev: jax.Array,  # (P,) f32 static routing weight E_v,init
+    migrating: jax.Array,  # (P,) bool secondary-reactivation epoch
+    susp_tick: jax.Array,  # (P,) i32 tick at which suspension began
+    surv_deadline: jax.Array,  # (P,) i32 shared survival TTL expiry tick
+    base: jax.Array,  # (N,) f32 rigid + ambient node memory (fraction of cap)
+    t: jax.Array,  # () i32 current tick
+    *,
+    airlock: bool,
+    residual: float,  # compressed glass-state residual memory fraction
+    watermark: float,  # suspension (airlock) / kill (kernel-OOM) threshold
+    safe: float,  # in-situ resume threshold (airlock only)
+    t_susp: int,  # in-situ recovery window, ticks
+    t_surv: int,  # shared survival TTL, ticks
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused per-tick survival decision (§III-G/H/I).
+
+    Returns ``(pressure (N,) f32, victim, resume, react, expire)`` — the
+    last four are (P,) bool masks; with ``airlock=False`` the transition
+    masks are all-False (kernel OOM has no ladder, only the kill).
+    """
+    N = base.shape[0]
+    P = st.shape[0]
+    valid = alloc_node >= 0
+    node_c = jnp.clip(alloc_node, 0, N - 1)
+    tgt = jnp.where(valid, alloc_node, N)  # OOB rows dropped by the scatter
+
+    resident = st == RUNNING
+    susp = st == SUSPENDED
+    mem_eff = jnp.where(
+        resident,
+        mem,
+        jnp.where(susp | (migrating & valid), mem * jnp.float32(residual), 0.0),
+    )
+    pressure = base.astype(jnp.float32).at[tgt].add(mem_eff, mode="drop")
+
+    # per-node extreme victim: max memory (kernel OOM) / min E_v (Airlock),
+    # lexicographic (score, slot) so equal scores still elect exactly one
+    over = pressure[node_c] > jnp.float32(watermark)
+    cand = resident & over & valid
+    score = -ev if airlock else mem
+    sc = jnp.where(cand, score, -jnp.inf)
+    best = jnp.full((N,), -jnp.inf, jnp.float32).at[tgt].max(sc, mode="drop")
+    top = cand & (sc == best[node_c]) & jnp.isfinite(sc)
+    slot = jnp.arange(P, dtype=jnp.int32)
+    wslot = (
+        jnp.full((N,), -1, jnp.int32)
+        .at[jnp.where(top, alloc_node, N)]
+        .max(jnp.where(top, slot, -1), mode="drop")
+    )
+    victim = top & (slot == wslot[node_c])
+
+    if not airlock:
+        zeros = jnp.zeros_like(victim)
+        return pressure, victim, zeros, zeros, zeros
+
+    # transition masks on the post-suspension view (victims folded in): a
+    # fresh victim has susp_tick = t and migrating = False, so it can never
+    # resume (its node is over the high watermark), react (age 0) or expire
+    # (not migrating) in the same tick — same semantics as the sequential
+    # suspend-then-transition reference, fused.
+    st_rc = jnp.where(victim, SUSPENDED, st)
+    mig_rc = migrating & ~victim
+    stick_rc = jnp.where(victim, t, susp_tick)
+
+    node_ok = pressure[node_c] < jnp.float32(safe)
+    glass = (st_rc == SUSPENDED) & ~mig_rc
+    resume = glass & node_ok & valid
+    react = glass & ~resume & ((t - stick_rc) > t_susp)
+    deadline = jnp.where(react, t + t_surv, surv_deadline)
+    expire = (
+        (mig_rc | react)
+        & (t > deadline)
+        & (st_rc != EMPTY)
+        & (st_rc != RUNNING)
+    )
+    return pressure, victim, resume, react, expire

@@ -1,0 +1,186 @@
+"""Airlock transition ordering: property tests over the survival ladder.
+
+§III-H/I ordering contract, checked on hand-built single-probe states driven
+through the real decision + application pipeline (``hotpath.survival_scan``
+-> ``airlock.runtime_control`` -> ``airlock.airlock_transitions``):
+
+  1. in-situ resume has priority over reactivation — any suspended,
+     non-migrating probe on a below-safe-watermark node resumes, no matter
+     how stale its suspension is;
+  2. reactivation grants a fresh E_patience budget (= E_v) and arms the
+     shared survival TTL;
+  3. survival-TTL expiry reclaims BOTH the primary allocation and any
+     destination reservation (secondary allocation).
+
+Each property also ships a deterministic pinned case so the invariants stay
+exercised when ``hypothesis`` is absent (the @given tests then skip via
+``tests/_hypothesis_compat.py``).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import LaminarConfig, MemoryConfig, airlock, hotpath
+from repro.core.state import EMPTY, RUNNING, SUSPENDED, init_state
+
+CFG = LaminarConfig(
+    num_nodes=4,
+    zone_size=8,
+    probe_capacity=16,
+    max_arrivals_per_tick=4,
+    rigid_frac_lo=0.0,  # no rigid pre-occupancy: pressure == amb exactly
+    rigid_frac_hi=0.0,
+    memory=MemoryConfig(enabled=True),
+    airlock=True,
+)
+T = 1000
+T_SUSP = CFG.ticks(CFG.t_susp_ms)
+T_SURV = CFG.ticks(CFG.t_surv_ms)
+
+
+def _glass_state(
+    *,
+    amb: float,
+    age: int,
+    ev: float = 48.0,
+    migrating: bool = False,
+    surv_deadline: int = 1 << 24,
+    alloc_word: int = 0,
+    alloc2_word: int = 0,
+):
+    """One probe (slot 0) in glass-state at node 0, everything else empty.
+
+    The probe's own mem is 0, so node pressure is exactly ``amb``."""
+    s = init_state(CFG, 0)
+    free = s.free
+    alloc = s.alloc
+    alloc2 = s.alloc2
+    node2 = s.node2
+    if alloc_word:
+        free = free.at[0, 0].set(free[0, 0] & jnp.uint32(~alloc_word & 0xFFFFFFFF))
+        alloc = alloc.at[0, 0].set(jnp.uint32(alloc_word))
+    if alloc2_word:
+        free = free.at[1, 0].set(free[1, 0] & jnp.uint32(~alloc2_word & 0xFFFFFFFF))
+        alloc2 = alloc2.at[0, 0].set(jnp.uint32(alloc2_word))
+        node2 = node2.at[0].set(1)
+    return s._replace(
+        t=jnp.asarray(T, jnp.int32),
+        st=s.st.at[0].set(SUSPENDED),
+        alloc_node=s.alloc_node.at[0].set(0),
+        ev=s.ev.at[0].set(ev),
+        patience=s.patience.at[0].set(-123.0),  # sentinel: must be replaced
+        migrating=s.migrating.at[0].set(migrating),
+        susp_tick=s.susp_tick.at[0].set(T - age),
+        surv_deadline=s.surv_deadline.at[0].set(surv_deadline),
+        amb=jnp.full((CFG.num_nodes,), amb, jnp.float32),
+        free=free,
+        alloc=alloc,
+        alloc2=alloc2,
+        node2=node2,
+    )
+
+
+def _ladder(s, cfg=CFG):
+    """One survival step: fused decision + state application."""
+    pressure, victim, resume, react, expire = hotpath.survival_scan(cfg, s)
+    s = airlock.runtime_control(cfg, s, victim)
+    s, dispatch = airlock.airlock_transitions(cfg, s, resume, react, expire)
+    return s, dispatch
+
+
+def check_resume_priority(amb: float, age: int):
+    s, dispatch = _ladder(_glass_state(amb=amb, age=age))
+    assert int(s.st[0]) == RUNNING  # resumed in place
+    assert int(s.metrics.resumed_insitu) == 1
+    assert int(s.metrics.reactivated) == 0
+    assert not bool(s.migrating[0]) and not bool(dispatch[0])
+
+
+def check_fresh_patience(amb: float, age: int, ev: float):
+    s, dispatch = _ladder(_glass_state(amb=amb, age=age, ev=ev))
+    assert int(s.metrics.reactivated) == 1
+    assert bool(s.migrating[0]) and bool(dispatch[0])
+    assert float(s.patience[0]) == ev  # fresh budget, sentinel replaced
+    assert int(s.surv_deadline[0]) == T + T_SURV
+    assert int(s.st[0]) == SUSPENDED  # glass-state retained while migrating
+
+
+def check_expiry_frees_both(alloc_word: int, alloc2_word: int, overdue: int):
+    s0 = _glass_state(
+        amb=0.85,  # between safe and high: no resume, no new suspension
+        age=1,
+        migrating=True,
+        surv_deadline=T - overdue,
+        alloc_word=alloc_word,
+        alloc2_word=alloc2_word,
+    )
+    free_before = np.asarray(s0.free).copy()
+    s, dispatch = _ladder(s0)
+    assert int(s.metrics.reclaimed) == 1
+    assert int(s.st[0]) == EMPTY and not bool(dispatch[0])
+    # both the primary allocation and the destination reservation returned
+    assert int(s.free[0, 0]) == int(free_before[0, 0] | alloc_word)
+    assert int(s.free[1, 0]) == int(free_before[1, 0] | alloc2_word)
+    assert int(s.alloc[0, 0]) == 0 and int(s.alloc2[0, 0]) == 0
+    assert int(s.alloc_node[0]) == -1 and int(s.node2[0]) == -1
+
+
+# ---- pinned deterministic cases (run with or without hypothesis) ----------
+
+
+def test_resume_priority_pinned():
+    # stale far beyond T_susp: reactivation is due, resume must still win
+    check_resume_priority(amb=0.3, age=50 * T_SUSP)
+
+
+def test_fresh_patience_pinned():
+    check_fresh_patience(amb=0.85, age=T_SUSP + 1, ev=96.0)
+
+
+def test_reactivation_requires_age_pinned():
+    # young glass-state on a pressured (not safe) node: must stay suspended
+    s, dispatch = _ladder(_glass_state(amb=0.85, age=T_SUSP))
+    assert int(s.st[0]) == SUSPENDED
+    assert int(s.metrics.reactivated) == 0 and not bool(dispatch[0])
+
+
+def test_expiry_frees_both_pinned():
+    check_expiry_frees_both(alloc_word=0b1111, alloc2_word=0b110000, overdue=1)
+
+
+# ---- property versions ----------------------------------------------------
+
+
+@given(
+    st.floats(min_value=0.0, max_value=0.79),
+    st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_resume_priority_property(amb, age):
+    """Below the safe watermark, resume always wins — regardless of age."""
+    check_resume_priority(amb, age)
+
+
+@given(
+    st.floats(min_value=0.805, max_value=0.895),
+    st.integers(min_value=T_SUSP + 1, max_value=10_000),
+    st.sampled_from([24.0, 48.0, 96.0, 256.0]),
+)
+@settings(max_examples=40, deadline=None)
+def test_fresh_patience_property(amb, age, ev):
+    """Between watermarks and past T_susp: reactivate with patience = E_v."""
+    check_fresh_patience(amb, age, ev)
+
+
+@given(
+    st.integers(min_value=1, max_value=(1 << 32) - 1),
+    st.integers(min_value=0, max_value=(1 << 32) - 1),
+    st.integers(min_value=1, max_value=1 << 20),
+)
+@settings(max_examples=40, deadline=None)
+def test_expiry_frees_both_property(alloc_word, alloc2_word, overdue):
+    """Any overdue migrating incarnation reclaims primary AND secondary."""
+    check_expiry_frees_both(alloc_word, alloc2_word, overdue)

@@ -1,0 +1,135 @@
+"""survival_scan kernel: oracle parity sweeps + victim tie-break regression.
+
+The victim selector used to rank candidates with a float composite key
+(``score * 1e4 + slot * 1e-3``), which loses the slot tie-break entirely once
+``score * 1e4`` exceeds float32's integer range (two exact-tie candidates
+both matched the per-node max -> two victims on one node) and collides
+near-equal scores (the 1e4 scale pushes their difference below one ulp).
+The replacement is a lexicographic (score, slot) argmax built from two exact
+scatter-max stages; these tests pin the failure cases.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import state as core_state
+from repro.kernels.survival_scan import survival_scan, survival_scan_ref
+from repro.kernels.survival_scan import ref as surv_ref_mod
+
+KW = dict(airlock=True, residual=0.3, watermark=0.9, safe=0.8, t_susp=80, t_surv=240)
+
+
+def _scan_both(st, node, mem, ev, N, *, airlock=True, **over):
+    """Run ref + interpret kernel on minimal columns; assert they agree."""
+    P = len(st)
+    kw = {**KW, "airlock": airlock, **over}
+    args = (
+        jnp.asarray(st, jnp.int32),
+        jnp.asarray(node, jnp.int32),
+        jnp.asarray(mem, jnp.float32),
+        jnp.asarray(ev, jnp.float32),
+        jnp.zeros((P,), jnp.bool_),
+        jnp.zeros((P,), jnp.int32),
+        jnp.full((P,), 1 << 24, jnp.int32),
+        jnp.full((N,), 0.95, jnp.float32),  # every node over the watermark
+        jnp.asarray(100, jnp.int32),
+    )
+    ref = survival_scan_ref(*args, **kw)
+    pal = survival_scan(*args, **kw, interpret=True)
+    for name, a, b in zip(("pressure", "victim", "resume", "react", "expire"), ref, pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    return [np.asarray(x) for x in ref]
+
+
+def test_state_codes_in_sync():
+    """The kernel package hardcodes the state machine codes (it must stay
+    importable without repro.core); they must match repro.core.state."""
+    assert surv_ref_mod.EMPTY == core_state.EMPTY
+    assert surv_ref_mod.RUNNING == core_state.RUNNING
+    assert surv_ref_mod.SUSPENDED == core_state.SUSPENDED
+
+
+@pytest.mark.parametrize("P", [1, 7, 512, 513, 1024, 2500])
+@pytest.mark.parametrize("airlock", [False, True])
+def test_survival_scan_shape_sweep(P, airlock):
+    """Oracle parity across block-boundary shapes (P % BLOCK_P in {0, 1, ...})."""
+    rng = np.random.default_rng(P + airlock)
+    N = 13
+    R, S = core_state.RUNNING, core_state.SUSPENDED
+    st = rng.choice([0, R, S], size=P, p=[0.4, 0.45, 0.15]).astype(np.int32)
+    node = np.where(rng.uniform(size=P) < 0.85, rng.integers(0, N, P), -1)
+    mem = rng.uniform(0, 0.3, P)
+    ev = rng.choice([24.0, 48.0, 96.0], P)
+    pressure, victim, *_ = _scan_both(
+        st, node, mem, ev, N, airlock=airlock,
+        watermark=0.9 if airlock else 1.0,
+    )
+    assert pressure.shape == (N,) and victim.shape == (P,)
+
+
+@pytest.mark.parametrize("airlock", [False, True])
+def test_one_victim_per_node(airlock):
+    """At most one victim per node, always — double victims double-free atoms
+    under kernel OOM."""
+    rng = np.random.default_rng(99)
+    P, N = 2000, 7
+    R = core_state.RUNNING
+    st = np.full(P, R, np.int32)
+    node = rng.integers(0, N, P)
+    # adversarial: huge pools of exact-tie scores on every node
+    mem = rng.choice([0.01, 0.02], P)
+    ev = rng.choice([1024.0, 2048.0], P)
+    _, victim, *_ = _scan_both(st, node, mem, ev, N, airlock=airlock)
+    per_node = np.bincount(node[victim], minlength=N)
+    assert per_node.max() == 1
+    assert victim.sum() == N  # every (over-watermark) node elected exactly one
+
+
+def test_exact_tie_elects_single_highest_slot():
+    """Regression: equal E_v at large magnitude used to elect BOTH probes
+    (slot * 1e-3 vanished below one ulp of score * 1e4)."""
+    R = core_state.RUNNING
+    st = [R, R, R]
+    node = [0, 0, 1]
+    ev = [1024.0, 1024.0, 7.0]  # slots 0,1 tie exactly on node 0
+    _, victim, *_ = _scan_both(st, node, [0.1] * 3, ev, 2)
+    np.testing.assert_array_equal(victim, [False, True, True])  # max slot wins
+
+
+def test_near_equal_scores_pick_true_extreme():
+    """Regression: under the old key, ``slot * 1e-3`` could DOMINATE a real
+    score difference (slot 4095 adds 4.095 to the key — more than a 4e-4
+    memory gap scaled by 1e4), electing the wrong victim. The lexicographic
+    selector must rank the score first, always."""
+    R = core_state.RUNNING
+    P = 4096  # victim in block 0, pretender at the far end of block 7
+    mem = np.full(P, 0.0)
+    st = np.zeros(P, np.int64)
+    st[[0, P - 1]] = R
+    mem[0], mem[P - 1] = 0.1004, 0.1000
+    old_key = np.float32(np.float32(0.1000) * 1e4 + (P - 1) * 1e-3)
+    assert old_key > np.float32(np.float32(0.1004) * 1e4)  # old picked wrong
+    _, victim, *_ = _scan_both(
+        st, np.zeros(P, np.int64), mem, np.full(P, 1.0), 1,
+        airlock=False, watermark=0.9,
+    )
+    assert victim.sum() == 1 and victim[0]  # true max memory wins
+    # airlock (min E_v): same shape, smaller E_v must win over higher slot
+    ev = np.full(P, 1.0)
+    ev[0], ev[P - 1] = 0.1000, 0.1004
+    _, victim, *_ = _scan_both(st, np.zeros(P, np.int64), mem, ev, 1)
+    assert victim.sum() == 1 and victim[0]  # true min E_v wins
+
+
+def test_slot_precision_beyond_float24():
+    """Slots above 2^24 - 1 would alias under any float32 slot encoding; the
+    integer slot stage must keep them exact. (Scaled-down proxy: adjacent
+    high slot indices with exact-tie scores.)"""
+    R = core_state.RUNNING
+    P = 4099  # not a block multiple; ties sit in the last partial block
+    st = np.full(P, R, np.int32)
+    node = np.zeros(P, np.int64)
+    ev = np.full(P, 512.0)
+    _, victim, *_ = _scan_both(st, node, np.full(P, 0.01), ev, 1)
+    assert victim.sum() == 1 and victim[P - 1]  # exact max slot, last row
