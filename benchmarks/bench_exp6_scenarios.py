@@ -1,0 +1,161 @@
+"""Exp6: scenario-programmable workloads — time-varying arrival schedules
+composed with correlated node disruption, Airlock vs kernel-OOM.
+
+Sweeps the named scenario presets (``repro.workloads.SCENARIOS``): stationary
+(control), ``bursty`` (MMPP two-state), ``diurnal`` (sinusoid), ``flash``
+(spike train), ``churn`` (stationary arrivals + correlated hard node
+failures), ``storm`` (bursty + failures). Each (scenario, airlock) cell runs
+``NUM_SEEDS`` replicate seeds as ONE compiled ``vmap``'d scan
+(``LaminarEngine.run_batch``); seeds share the cluster geometry of
+``seeds[0]`` while both the traffic AND the scenario processes (burst
+placement, failure waves) vary per seed through the PRNG key. Memory
+dynamics are on in every cell, so the airlock column contrasts the survival
+ladder (including disruption-forced secondary re-addressing) against blind
+kernel-OOM + outright eviction under the exact same pressure patterns.
+
+``EXP6_SCENARIOS=stationary,storm`` (comma list) restricts the sweep — the
+CI smoke uses exactly that two-scenario subset.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import (
+    RESULTS,
+    bench_cfg,
+    emit,
+    mean_over_seeds,
+    row_str,
+    run_seeds,
+)
+from repro.core import MemoryConfig
+from repro.workloads import SCENARIOS
+
+NUM_SEEDS = 3
+
+SCALARS = (
+    "completed_success_ratio",
+    "start_success_ratio",
+    "oom_kill_l",
+    "oom_kill_f",
+    "exec_survival_ratio",
+    "probe_drops",
+    "node_failures",
+    "node_recoveries",
+    "evicted",
+    "reactivated",
+    "migrated",
+    "reclaimed",
+    "p99_ms",
+)
+
+
+def _scenario_names() -> list:
+    env = os.environ.get("EXP6_SCENARIOS", "")
+    if env:
+        names = [n.strip() for n in env.split(",") if n.strip()]
+        unknown = [n for n in names if n not in SCENARIOS]
+        if unknown:
+            raise SystemExit(f"EXP6_SCENARIOS: unknown scenario(s) {unknown}")
+        return names
+    return list(SCENARIOS)
+
+
+def _merge_previous_rows(rows: list) -> list:
+    """A filtered run (EXP6_SCENARIOS set) must not erase the other
+    scenarios' persisted rows — e.g. the CI smoke regenerating
+    EXPERIMENTS.md would otherwise drop the full sweep down to its subset.
+    Rows merge by (scenario, airlock) and keep the preset registry order."""
+    path = RESULTS / "exp6_scenarios.json"
+    if not (os.environ.get("EXP6_SCENARIOS") and path.exists()):
+        return rows
+    fresh = {(r["scenario"], r["airlock"]): r for r in rows}
+    try:
+        old = json.loads(path.read_text()).get("rows", [])
+    except (json.JSONDecodeError, OSError):
+        return rows
+    merged = dict(fresh)
+    for r in old:
+        merged.setdefault((r.get("scenario"), r.get("airlock")), r)
+    order = {n: i for i, n in enumerate(SCENARIOS)}
+    return sorted(
+        merged.values(),
+        key=lambda r: (order.get(r.get("scenario"), len(order)), bool(r.get("airlock"))),
+    )
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    seeds = [seed + i for i in range(NUM_SEEDS)]
+    for name in _scenario_names():
+        for airlock in (False, True):
+            cfg = bench_cfg(
+                full=full,
+                num_nodes=None if full else 256,
+                rho=0.8,
+                two_phase=False,
+                regeneration=False,
+                hop_loss=0.0,
+                airlock=airlock,
+                memory=MemoryConfig(enabled=True),
+                scenario=SCENARIOS[name],
+                horizon_ms=30_000.0 if full else 900.0,
+            )
+            outs = run_seeds(cfg, seeds)  # ONE vmap'd scan for this cell
+            mean = mean_over_seeds(outs, SCALARS)
+            rows.append(
+                {
+                    "scenario": name,
+                    "airlock": airlock,
+                    "num_seeds": NUM_SEEDS,
+                    "completed_ratio": mean["completed_success_ratio"],
+                    "start_ratio": mean["start_success_ratio"],
+                    "oom_kill_l": mean["oom_kill_l"],
+                    "oom_kill_f": mean["oom_kill_f"],
+                    "exec_survival": mean["exec_survival_ratio"],
+                    "probe_drops": mean["probe_drops"],
+                    "node_failures": mean["node_failures"],
+                    "node_recoveries": mean["node_recoveries"],
+                    "evicted": mean["evicted"],
+                    "reactivated": mean["reactivated"],
+                    "migrated": mean["migrated"],
+                    "reclaimed": mean["reclaimed"],
+                    "p99_ms": mean["p99_ms"],
+                }
+            )
+            print(
+                "  "
+                + row_str(
+                    rows[-1],
+                    (
+                        "scenario",
+                        "airlock",
+                        "completed_ratio",
+                        "oom_kill_l",
+                        "exec_survival",
+                        "node_failures",
+                        "evicted",
+                        "migrated",
+                    ),
+                )
+            )
+    on = [r for r in rows if r["airlock"]]
+    emit(
+        "exp6_scenarios",
+        {"rows": _merge_previous_rows(rows)},
+        t0,
+        derived=(
+            f"scenarios={len(rows) // 2};"
+            f"worst_exec_survival_airlock={min(r['exec_survival'] for r in on):.4f};"
+            f"seeds={NUM_SEEDS}"
+        ),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

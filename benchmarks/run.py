@@ -22,6 +22,7 @@ from benchmarks import (
     bench_exp3_staleness,
     bench_exp4_ablations,
     bench_exp5_airlock,
+    bench_exp6_scenarios,
     bench_hotpath,
     bench_moe_router,
     bench_serving,
@@ -34,6 +35,7 @@ BENCHES = {
     "exp3": bench_exp3_staleness.run,
     "exp4": bench_exp4_ablations.run,
     "exp5": bench_exp5_airlock.run,
+    "exp6": bench_exp6_scenarios.run,
     "control_work": bench_control_work.run,
     "hotpath": bench_hotpath.run,
     "moe_router": bench_moe_router.run,

@@ -19,11 +19,21 @@ from repro.core.config import (
     WorkloadConfig,
 )
 from repro.core.engine import LaminarEngine
+from repro.workloads import (
+    SCENARIOS,
+    DisruptionConfig,
+    ScenarioConfig,
+    ScheduleConfig,
+)
 
 __all__ = [
     "BaselineConfig",
+    "DisruptionConfig",
     "LaminarConfig",
     "MemoryConfig",
+    "SCENARIOS",
+    "ScenarioConfig",
+    "ScheduleConfig",
     "WorkloadConfig",
     "LaminarEngine",
 ]

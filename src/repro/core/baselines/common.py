@@ -18,12 +18,15 @@ import numpy as np
 
 from repro.core import bitmap, workload
 from repro.core.config import BaselineConfig, LaminarConfig
+from repro.core.disrupt import disrupted_capacity
 from repro.core.state import (
     HIST_BUCKETS,
     bucket_upper_ms,
     init_state,
     latency_bucket,
 )
+from repro.workloads import schedule as wl_schedule
+from repro.workloads.disruption import disruption_step
 
 # task states shared by the baseline models
 B_EMPTY = 0
@@ -88,6 +91,100 @@ def init_cluster(cfg: LaminarConfig, seed: int):
     free = s.free
     lam = workload.lambda_per_tick(cfg, float(np.asarray(s.rep_S).sum()))
     return free, lam
+
+
+# ---------------------------------------------------------------------------
+# scenario threading (arrival-rate schedule + node disruption): the baselines
+# consume the exact same schedule functions and disruption event process as
+# the Laminar engine, so scenario sweeps stay head-to-head fair.
+# ---------------------------------------------------------------------------
+
+
+class ScenarioState(NamedTuple):
+    """Per-run scenario process state carried through a baseline's scan."""
+
+    sched_key: jax.Array  # per-run arrival-schedule key (constant)
+    node_up: jax.Array  # (N,) bool
+    down_until: jax.Array  # (N,) i32
+    free0: jax.Array  # (N, W) painted bitmap (recovery restore base)
+
+
+def scenario_init(cfg: LaminarConfig, seed: int, free: jax.Array) -> ScenarioState:
+    return ScenarioState(
+        sched_key=wl_schedule.schedule_key(seed),
+        node_up=jnp.ones((cfg.num_nodes,), jnp.bool_),
+        down_until=jnp.zeros((cfg.num_nodes,), jnp.int32),
+        free0=free,
+    )
+
+
+def scenario_lam(cfg: LaminarConfig, scen: ScenarioState, lam: float, t: jax.Array):
+    """Per-tick arrival intensity under the configured schedule.
+
+    Returns the plain float ``lam`` for the stationary schedule so baseline
+    arrival streams stay bit-for-bit identical to the pre-scenario models.
+    """
+    sched = cfg.scenario.schedule
+    if sched.kind == "stationary":
+        return lam
+    return wl_schedule.rate_per_tick(sched, lam, t, scen.sched_key, cfg.dt_ms)
+
+
+def scenario_tick(
+    cfg: LaminarConfig,
+    scen: "ScenarioState",
+    tt: TaskTable,
+    free: jax.Array,
+    m: BaseMetrics,
+    t: jax.Array,
+    k_dis,
+    lam: float,
+):
+    """One scenario tick for a baseline step: disruption (when enabled,
+    ``k_dis`` must be the extra key the step split off) then the scheduled
+    per-tick rate. Returns ``(scen, tt, free, m, lam_t)`` — the single
+    call every baseline makes, so the threading cannot drift per model."""
+    if cfg.scenario.disruption.enabled:
+        scen, tt, free, m = scenario_disrupt(cfg, scen, tt, free, m, t, k_dis)
+    return scen, tt, free, m, scenario_lam(cfg, scen, lam, t)
+
+
+def scenario_disrupt(
+    cfg: LaminarConfig,
+    scen: ScenarioState,
+    tt: TaskTable,
+    free: jax.Array,
+    m: BaseMetrics,
+    t: jax.Array,
+    key: jax.Array,
+):
+    """Apply one disruption tick to a baseline's tables.
+
+    Down nodes advertise zero capacity (every admission against them fails
+    and flows into the model's own retry/spillback/rollback path); a hard
+    failure kills residents outright (counted as ``failed`` — the baselines
+    have no survival ladder, which is exactly the contrast Exp6 measures);
+    a drain lets residents finish. Recovery restores the painted bitmap
+    minus atoms still held by surviving residents.
+    """
+    d = cfg.scenario.disruption
+    N = cfg.num_nodes
+    up, down_until, fail, recover = disruption_step(
+        d, scen.node_up, scen.down_until, t, key, cfg.dt_ms
+    )
+
+    if not d.drain:
+        hit = (tt.alloc_node >= 0) & fail[jnp.clip(tt.alloc_node, 0, N - 1)]
+        victim = (tt.st == B_RUNNING) & hit
+        m = m._replace(failed=m.failed + jnp.sum(victim.astype(jnp.int32)))
+        tt = tt._replace(
+            st=jnp.where(victim, B_EMPTY, tt.st),
+            alloc=jnp.where(victim[:, None], jnp.uint32(0), tt.alloc),
+            alloc_node=jnp.where(victim, -1, tt.alloc_node),
+        )
+
+    free = disrupted_capacity(free, scen.free0, up, recover, tt.alloc, tt.alloc_node)
+    return ScenarioState(scen.sched_key, up, down_until, scen.free0), tt, free, m
 
 
 def inject(

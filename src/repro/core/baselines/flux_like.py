@@ -34,6 +34,7 @@ class FluxState(NamedTuple):
     carry: jax.Array
     t: jax.Array
     key: jax.Array
+    scen: C.ScenarioState
     metrics: C.BaseMetrics
 
 
@@ -44,13 +45,20 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
     levels = max(1, math.ceil(math.log(max(n_leaves, 2), bcfg.flux_fanout)))
     hb = cfg.ticks(bcfg.heartbeat_ms)
 
+    disruption_on = cfg.scenario.disruption.enabled
+
     def step(s: FluxState, _):
-        key, k_arr, k_leaf, k_node = jax.random.split(s.key, 4)
+        key, k_arr, k_leaf, k_node, *k_dis = jax.random.split(
+            s.key, 5 if disruption_on else 4
+        )
         s = s._replace(key=key)
-        tt, free, m = s.tt, s.free, s.metrics
+        tt, free, m, scen = s.tt, s.free, s.metrics, s.scen
 
         tt, free, m = C.complete(cfg, tt, free, m)
-        tt, m, new = C.inject(cfg, tt, m, k_arr, lam, s.t)
+        scen, tt, free, m, lam_t = C.scenario_tick(
+            cfg, scen, tt, free, m, s.t, k_dis[0] if disruption_on else None, lam
+        )
+        tt, m, new = C.inject(cfg, tt, m, k_arr, lam_t, s.t)
         # new arrivals wait at the root (shard == -1 marks "awaiting dispatch")
         tt = tt._replace(shard=jnp.where(new, -1, tt.shard))
 
@@ -133,7 +141,7 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
         stale_leaf_S = jnp.where((s.t % hb) == 0, leaf_S, s.stale_leaf_S)
 
         tt, m = C.expire(cfg, bcfg, tt, m, s.t)
-        s = FluxState(tt, free, stale_leaf_S, carry, s.t + 1, s.key, m)
+        s = FluxState(tt, free, stale_leaf_S, carry, s.t + 1, s.key, scen, m)
         return s, jnp.stack([m.arrived, m.started, m.completed])
 
     return step
@@ -162,6 +170,7 @@ def run(
         carry=jnp.zeros((), jnp.float32),
         t=jnp.zeros((), jnp.int32),
         key=jax.random.PRNGKey(seed),
+        scen=C.scenario_init(cfg, seed, free),
         metrics=C.BaseMetrics.zeros(),
     )
     nt = num_ticks if num_ticks is not None else cfg.num_ticks

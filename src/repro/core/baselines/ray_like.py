@@ -41,20 +41,27 @@ class RayState(NamedTuple):
     carry_cold: jax.Array
     t: jax.Array
     key: jax.Array
+    scen: C.ScenarioState
     metrics: C.BaseMetrics
 
 
 def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
     N = cfg.num_nodes
     hb = cfg.ticks(bcfg.heartbeat_ms)
+    disruption_on = cfg.scenario.disruption.enabled
 
     def step(s: RayState, _):
-        key, k_arr, k_local, k_shard, k_pick = jax.random.split(s.key, 5)
+        key, k_arr, k_local, k_shard, k_pick, *k_dis = jax.random.split(
+            s.key, 6 if disruption_on else 5
+        )
         s = s._replace(key=key)
-        tt, free, m = s.tt, s.free, s.metrics
+        tt, free, m, scen = s.tt, s.free, s.metrics, s.scen
 
         tt, free, m = C.complete(cfg, tt, free, m)
-        tt, m, new = C.inject(cfg, tt, m, k_arr, lam, s.t)
+        scen, tt, free, m, lam_t = C.scenario_tick(
+            cfg, scen, tt, free, m, s.t, k_dis[0] if disruption_on else None, lam
+        )
+        tt, m, new = C.inject(cfg, tt, m, k_arr, lam_t, s.t)
 
         # new arrivals land on a uniformly random local node (locality prior)
         rnd_node = jax.random.randint(k_local, tt.node.shape, 0, N)
@@ -142,7 +149,9 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
         stale_S = jnp.where((s.t % hb) == 0, true_S, s.stale_S)
 
         tt, m = C.expire(cfg, bcfg, tt, m, s.t)
-        s = RayState(tt, free, stale_S, carry_hot, carry_cold, s.t + 1, s.key, m)
+        s = RayState(
+            tt, free, stale_S, carry_hot, carry_cold, s.t + 1, s.key, scen, m
+        )
         return s, jnp.stack([m.arrived, m.started, m.completed])
 
     return step
@@ -167,6 +176,7 @@ def run(
         carry_cold=jnp.zeros((), jnp.float32),
         t=jnp.zeros((), jnp.int32),
         key=jax.random.PRNGKey(seed),
+        scen=C.scenario_init(cfg, seed, free),
         metrics=C.BaseMetrics.zeros(),
     )
     nt = num_ticks if num_ticks is not None else cfg.num_ticks

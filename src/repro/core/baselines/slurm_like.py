@@ -26,6 +26,7 @@ class SlurmState(NamedTuple):
     carry: jax.Array  # fractional decision budget
     t: jax.Array
     key: jax.Array
+    scen: C.ScenarioState
     metrics: C.BaseMetrics
 
 
@@ -34,14 +35,20 @@ MAX_PROC = 64  # max decisions evaluated per tick (budget-masked)
 
 def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
     N = cfg.num_nodes
+    disruption_on = cfg.scenario.disruption.enabled
 
     def step(s: SlurmState, _):
-        key, k_arr, k_node = jax.random.split(s.key, 3)
+        key, k_arr, k_node, *k_dis = jax.random.split(
+            s.key, 4 if disruption_on else 3
+        )
         s = s._replace(key=key)
-        tt, free, m = s.tt, s.free, s.metrics
+        tt, free, m, scen = s.tt, s.free, s.metrics, s.scen
 
         tt, free, m = C.complete(cfg, tt, free, m)
-        tt, m, _ = C.inject(cfg, tt, m, k_arr, lam, s.t)
+        scen, tt, free, m, lam_t = C.scenario_tick(
+            cfg, scen, tt, free, m, s.t, k_dis[0] if disruption_on else None, lam
+        )
+        tt, m, _ = C.inject(cfg, tt, m, k_arr, lam_t, s.t)
 
         # backoff progress
         in_backoff = tt.st == C.B_BACKOFF
@@ -109,7 +116,7 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
             lat_hist=hist,
         )
         # NO task timeout for Slurm-like (unbounded in-memory queuing concession)
-        s = SlurmState(tt, free, carry, s.t + 1, s.key, m)
+        s = SlurmState(tt, free, carry, s.t + 1, s.key, scen, m)
         return s, jnp.stack([m.arrived, m.started, m.completed])
 
     return step
@@ -131,6 +138,7 @@ def run(
         carry=jnp.zeros((), jnp.float32),
         t=jnp.zeros((), jnp.int32),
         key=jax.random.PRNGKey(seed),
+        scen=C.scenario_init(cfg, seed, free),
         metrics=C.BaseMetrics.zeros(),
     )
     nt = num_ticks if num_ticks is not None else cfg.num_ticks

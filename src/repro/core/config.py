@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.workloads.scenario import ScenarioConfig
+
 MS = 1.0  # readability alias: all *_ms fields are in milliseconds
 
 
@@ -149,6 +151,11 @@ class LaminarConfig:
     # --- workload / memory ----------------------------------------------------
     workload: WorkloadConfig = dataclasses.field(default_factory=WorkloadConfig)
     memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
+
+    # --- scenario: arrival-rate schedule + node disruption process --------------
+    # (see src/repro/workloads/; the default is the stationary, disruption-free
+    # scenario, which reproduces the pre-scenario engine bit-for-bit)
+    scenario: ScenarioConfig = dataclasses.field(default_factory=ScenarioConfig)
 
     # --- offered load -----------------------------------------------------------
     rho: float = 0.8  # offered load vs ideal sustainable throughput

@@ -1,0 +1,179 @@
+"""Apply scenario node-disruption events to the Laminar engine state.
+
+The event *process* (which nodes fail/recover each tick) is the pure
+``repro.workloads.disruption.disruption_step``; this module owns the
+consequences inside the engine's tables:
+
+  capacity   a down node advertises zero capacity: its ``free`` bitmap words
+             are zeroed, so true-bitmap feasibility (and therefore
+             arbitration) rejects every admission for the outage. Recovery
+             restores the painted bitmap minus atoms still held by live
+             tasks (``free0 & ~held``) — after a hard failure with no
+             surviving holders that is exactly the pre-failure bitmap.
+
+  residents  hard failure (``drain=False``) destroys node-local state. With
+             Airlock on, residents (RUNNING or glass-state SUSPENDED) are
+             forced into the secondary re-addressing epoch — fresh
+             E_patience, shared survival TTL, TEG re-dispatch this tick —
+             modelling Airlock's compressed glass-state surviving off-node;
+             their atoms are lost with the node. With Airlock off they are
+             killed outright (``evicted``). A graceful drain
+             (``drain=True``) leaves residents running to completion.
+
+  reservations  a primary reservation on a failed node loses its atoms and
+             returns to kinetic addressing (deposit forfeited); a migration
+             landing reservation on a failed node reverts to glass-state at
+             the source and re-enters TEG.
+
+This stage runs after ``arbiter.completions`` and before
+``zhaf.build_view`` so the node view, reports and every arbitration round of
+the tick see the post-disruption bitmaps. (Frees that land on a down node
+later in the tick — e.g. a migration landing whose *source* is down — are
+re-zeroed here before the next tick's view, so no admission can ever consume
+them.)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LaminarConfig
+from repro.core.state import ADDRESSING, EMPTY, RESERVED, RUNNING, SUSPENDED, SimState
+from repro.workloads.disruption import disruption_step
+from repro.workloads.scenario import ScenarioConfig
+
+
+def disrupted_capacity(
+    free: jax.Array,
+    free0: jax.Array,
+    up: jax.Array,
+    recover: jax.Array,
+    alloc: jax.Array,
+    alloc_node: jax.Array,
+    alloc2: jax.Array | None = None,
+    node2: jax.Array | None = None,
+) -> jax.Array:
+    """Post-disruption free bitmap: zero down nodes, restore recovered ones.
+
+    Recovery restores ``free0 & ~held`` — the painted bitmap minus atoms
+    still held by live tasks. Shared by the engine and the baselines so the
+    restore invariant cannot diverge between them.
+    """
+    N, W = free.shape
+    tgt = jnp.where(alloc_node >= 0, alloc_node, N)
+    acc = jnp.zeros((N + 1, W), jnp.uint32).at[tgt].add(
+        jnp.where(alloc_node[:, None] >= 0, alloc, jnp.uint32(0))
+    )
+    if alloc2 is not None:
+        tgt2 = jnp.where(node2 >= 0, node2, N)
+        acc = acc.at[tgt2].add(jnp.where(node2[:, None] >= 0, alloc2, jnp.uint32(0)))
+    held = acc[:N]  # live allocations are disjoint per node: add == or
+    free = jnp.where(recover[:, None], free0 & ~held, free)
+    return jnp.where(up[:, None], free, jnp.uint32(0))
+
+
+def apply(
+    cfg: LaminarConfig, scenario: ScenarioConfig, s: SimState, key: jax.Array
+) -> Tuple[SimState, jax.Array]:
+    """One disruption tick; returns ``(state, re-dispatch mask)``.
+
+    The mask marks probes that must re-enter the network through TEG this
+    tick (Airlock re-addressing of evicted residents and of migration
+    landings whose destination died). No-op when disruption is disabled.
+    """
+    d = scenario.disruption
+    if not d.enabled:
+        return s, jnp.zeros_like(s.migrating)
+
+    N = cfg.num_nodes
+    up, down_until, fail, recover = disruption_step(
+        d, s.node_up, s.down_until, s.t, key, cfg.dt_ms
+    )
+    airlock_on = cfg.airlock and cfg.memory.enabled
+
+    st, migrating = s.st, s.migrating
+    patience, deposit = s.patience, s.deposit
+    surv_deadline, susp_tick = s.surv_deadline, s.susp_tick
+    alloc, alloc_node, mem = s.alloc, s.alloc_node, s.mem
+    alloc2, node2 = s.alloc2, s.node2
+    dispatch = jnp.zeros_like(s.migrating)
+    m = s.metrics
+
+    if not d.drain:
+        hit1 = (s.alloc_node >= 0) & fail[jnp.clip(s.alloc_node, 0, N - 1)]
+        hit2 = (s.node2 >= 0) & fail[jnp.clip(s.node2, 0, N - 1)]
+        resident = ((s.st == RUNNING) | (s.st == SUSPENDED)) & hit1
+        resv = (s.st == RESERVED) & ~s.migrating & hit1
+
+        if airlock_on:
+            # forced secondary re-addressing: the survival ladder's
+            # reactivation semantics (fresh E_patience, shared TTL), with a
+            # zero source allocation — the node is gone
+            st = jnp.where(resident, SUSPENDED, st)
+            migrating = jnp.where(resident, True, migrating)
+            patience = jnp.where(resident, s.ev, patience)
+            surv_deadline = jnp.where(
+                resident, s.t + cfg.ticks(cfg.t_surv_ms), surv_deadline
+            )
+            susp_tick = jnp.where(resident, s.t, susp_tick)
+            dispatch = dispatch | resident
+
+            # migration landing lost with its destination: back to glass-state
+            mig_resv = (s.st == RESERVED) & s.migrating & hit2
+            st = jnp.where(mig_resv, SUSPENDED, st)
+            alloc2 = jnp.where(mig_resv[:, None], jnp.uint32(0), alloc2)
+            node2 = jnp.where(mig_resv, -1, node2)
+            dispatch = dispatch | mig_resv
+
+            # a migrating incarnation whose control probe is in flight when
+            # its SOURCE dies loses the source state exactly like a
+            # glass-state resident — drop the allocation; the probe keeps
+            # flying and may still land via its destination reservation
+            lost_state = resident | (s.migrating & hit1 & ~resident)
+        else:
+            st = jnp.where(resident, EMPTY, st)
+            lost_state = resident
+
+        alloc = jnp.where(lost_state[:, None], jnp.uint32(0), alloc)
+        alloc_node = jnp.where(lost_state, -1, alloc_node)
+        mem = jnp.where(lost_state, 0.0, mem)
+
+        # primary reservation on a dead node: atoms gone, deposit forfeited,
+        # back to kinetic addressing (the launchpad is infeasible now, so the
+        # next candidate scan bounces the probe off the dead node)
+        st = jnp.where(resv, ADDRESSING, st)
+        alloc = jnp.where(resv[:, None], jnp.uint32(0), alloc)
+        alloc_node = jnp.where(resv, -1, alloc_node)
+        deposit = jnp.where(resv, 0.0, deposit)
+
+        m = m._replace(evicted=m.evicted + jnp.sum(lost_state.astype(jnp.int32)))
+
+    free = disrupted_capacity(
+        s.free, s.free0, up, recover, alloc, alloc_node, alloc2, node2
+    )
+
+    m = m._replace(
+        node_failures=m.node_failures + jnp.sum(fail.astype(jnp.int32)),
+        node_recoveries=m.node_recoveries + jnp.sum(recover.astype(jnp.int32)),
+    )
+    s = s._replace(
+        node_up=up,
+        down_until=down_until,
+        st=st,
+        migrating=migrating,
+        patience=patience,
+        deposit=deposit,
+        surv_deadline=surv_deadline,
+        susp_tick=susp_tick,
+        alloc=alloc,
+        alloc_node=alloc_node,
+        mem=mem,
+        alloc2=alloc2,
+        node2=node2,
+        free=free,
+        metrics=m,
+    )
+    return s, dispatch

@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import airlock, arbiter, da, hotpath, teg, workload, zhaf
+from repro.core import airlock, arbiter, da, disrupt, hotpath, teg, workload, zhaf
 from repro.core.config import LaminarConfig
+from repro.workloads import schedule as wl_schedule
+from repro.workloads.scenario import ScenarioConfig
 from repro.core.state import (
     EMPTY,
     HIST_BUCKETS,
@@ -49,11 +51,21 @@ TS_FIELDS = (
 
 
 def _inject_arrivals(
-    cfg: LaminarConfig, s: SimState, key: jax.Array, lam_per_tick: float
+    cfg: LaminarConfig,
+    s: SimState,
+    key: jax.Array,
+    lam_per_tick: float | jax.Array,
+    batch: workload.ArrivalBatch | None = None,
 ) -> Tuple[SimState, jax.Array]:
-    """Sample the open-loop Poisson batch and write it into free probe slots."""
+    """Sample the open-loop Poisson batch and write it into free probe slots.
+
+    ``lam_per_tick`` may be a traced scalar (scenario schedules evaluate it
+    per tick inside the scan). ``batch`` overrides the sampled batch — test
+    hook for the rows-beyond-``n``-are-inert invariant.
+    """
     k_batch, k_oc, k_ocv = jax.random.split(key, 3)
-    batch = workload.sample_arrivals(cfg, k_batch, lam_per_tick)
+    if batch is None:
+        batch = workload.sample_arrivals(cfg, k_batch, lam_per_tick)
     n_max = cfg.max_arrivals_per_tick
 
     want = jnp.arange(n_max) < batch.n
@@ -113,13 +125,27 @@ def _inject_arrivals(
     return s._replace(metrics=m), mask
 
 
-def make_step(cfg: LaminarConfig, lam_per_tick: float):
-    """Build the one-tick transition (cfg and lambda are closed over)."""
+def make_step(
+    cfg: LaminarConfig, lam_per_tick: float, scenario: ScenarioConfig | None = None
+):
+    """Build the one-tick transition (cfg, lambda and scenario closed over).
+
+    ``scenario`` defaults to ``cfg.scenario``; a stationary, disruption-free
+    scenario reproduces the pre-scenario tick bit-for-bit (same key splits,
+    same arrival stream).
+    """
+    scenario = cfg.scenario if scenario is None else scenario
+    sched = scenario.schedule
+    disruption_on = scenario.disruption.enabled
 
     max_dispatch = cfg.max_arrivals_per_tick + 256
+    if disruption_on and not scenario.disruption.drain:
+        # eviction headroom: a failure event can force at most one resident
+        # per atom on each failed node into TEG re-dispatch the same tick
+        max_dispatch += 2 * scenario.disruption.fail_block * cfg.atoms_per_node
 
     def step(s: SimState, _) -> Tuple[SimState, jax.Array]:
-        key, *ks = jax.random.split(s.key, 8)
+        key, *ks = jax.random.split(s.key, 9 if disruption_on else 8)
         s = s._replace(key=key)
 
         # ---- runtime survival (Exp5) ---------------------------------------
@@ -137,6 +163,12 @@ def make_step(cfg: LaminarConfig, lam_per_tick: float):
         # ---- service progress ------------------------------------------------
         s = arbiter.completions(cfg, s)
 
+        # ---- scenario disruption: fail/drain/recover nodes --------------------
+        if disruption_on:
+            s, evict_mask = disrupt.apply(cfg, scenario, s, ks[7])
+        else:
+            evict_mask = jnp.zeros_like(s.migrating)
+
         # ---- true node state, computed once per tick ---------------------------
         view = zhaf.build_view(cfg, s)
 
@@ -145,9 +177,15 @@ def make_step(cfg: LaminarConfig, lam_per_tick: float):
         s = teg.refresh(cfg, s)
 
         # ---- admissions hot path ----------------------------------------------
-        s, arrival_mask = _inject_arrivals(cfg, s, ks[2], lam_per_tick)
+        if sched.kind == "stationary":
+            lam_t = lam_per_tick  # exact pre-scenario arrival stream
+        else:
+            lam_t = wl_schedule.rate_per_tick(
+                sched, lam_per_tick, s.t, s.sched_key, cfg.dt_ms
+            )
+        s, arrival_mask = _inject_arrivals(cfg, s, ks[2], lam_t)
         s, regen_mask = da.move(cfg, s, ks[3])
-        dispatch_mask = arrival_mask | regen_mask | react_mask
+        dispatch_mask = arrival_mask | regen_mask | react_mask | evict_mask
         s = teg.dispatch(cfg, s, ks[4], dispatch_mask, max_dispatch)
         s = da.address(cfg, s, ks[5], view)
 
@@ -184,10 +222,16 @@ class LaminarEngine:
         lam = workload.lambda_per_tick(self.cfg, free_atoms)
         return s, lam
 
-    def _runner(self, lam: float, num_ticks: int):
-        key = (round(lam, 6), num_ticks)
+    def _runner(
+        self, lam: float, num_ticks: int, scenario: ScenarioConfig | None = None
+    ):
+        scenario = self.cfg.scenario if scenario is None else scenario
+        # the compiled scan is specialized on the FULL scenario signature —
+        # keying on round(lam, 6) alone would collide two scenarios that
+        # share a base rate but differ in schedule or disruption parameters
+        key = (round(lam, 6), num_ticks, scenario.signature())
         if key not in self._compiled:
-            step = make_step(self.cfg, lam)
+            step = make_step(self.cfg, lam, scenario)
 
             def run(s: SimState):
                 return jax.lax.scan(step, s, None, length=num_ticks)
@@ -195,10 +239,15 @@ class LaminarEngine:
             self._compiled[key] = jax.jit(run)
         return self._compiled[key]
 
-    def run(self, seed: int = 0, num_ticks: int | None = None) -> Dict[str, Any]:
+    def run(
+        self,
+        seed: int = 0,
+        num_ticks: int | None = None,
+        scenario: ScenarioConfig | None = None,
+    ) -> Dict[str, Any]:
         s, lam = self.init(seed)
         nt = num_ticks if num_ticks is not None else self.cfg.num_ticks
-        final, ts = self._runner(lam, nt)(s)
+        final, ts = self._runner(lam, nt, scenario)(s)
         out = summarize(self.cfg, final, np.asarray(ts))
         out["lambda_per_s"] = lam / self.cfg.dt_ms * 1e3
         return out
@@ -228,12 +277,18 @@ class LaminarEngine:
             lambda x: jnp.broadcast_to(x[None], (B,) + x.shape), base
         )
         keys = jnp.stack([jax.random.PRNGKey(sd) for sd in seeds])
-        return batched._replace(key=keys), lam
+        # the arrival schedule varies per seed too (burst placement etc.);
+        # only the cluster geometry is shared from seeds[0]
+        sched_keys = jnp.stack([wl_schedule.schedule_key(sd) for sd in seeds])
+        return batched._replace(key=keys, sched_key=sched_keys), lam
 
-    def _batch_runner(self, lam: float, num_ticks: int):
-        key = ("batch", round(lam, 6), num_ticks)
+    def _batch_runner(
+        self, lam: float, num_ticks: int, scenario: ScenarioConfig | None = None
+    ):
+        scenario = self.cfg.scenario if scenario is None else scenario
+        key = ("batch", round(lam, 6), num_ticks, scenario.signature())
         if key not in self._compiled:
-            step = make_step(self.cfg, lam)
+            step = make_step(self.cfg, lam, scenario)
 
             def run_one(s: SimState):
                 return jax.lax.scan(step, s, None, length=num_ticks)
@@ -242,7 +297,10 @@ class LaminarEngine:
         return self._compiled[key]
 
     def run_batch(
-        self, seeds: Sequence[int], num_ticks: int | None = None
+        self,
+        seeds: Sequence[int],
+        num_ticks: int | None = None,
+        scenario: ScenarioConfig | None = None,
     ) -> List[Dict[str, Any]]:
         """Run all ``seeds`` through ONE compiled ``vmap``'d ``lax.scan``.
 
@@ -254,7 +312,7 @@ class LaminarEngine:
         seeds = [int(x) for x in seeds]
         s, lam = self.init_batch(seeds)
         nt = num_ticks if num_ticks is not None else self.cfg.num_ticks
-        final, ts = self._batch_runner(lam, nt)(s)
+        final, ts = self._batch_runner(lam, nt, scenario)(s)
         ts = np.asarray(ts)
         outs: List[Dict[str, Any]] = []
         for i, sd in enumerate(seeds):

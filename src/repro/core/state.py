@@ -63,6 +63,12 @@ class Metrics(NamedTuple):
     migrated: jax.Array
     reclaimed: jax.Array
     throttled_rounds: jax.Array
+    # scenario disruption process (node failures / drains)
+    node_failures: jax.Array
+    node_recoveries: jax.Array
+    # residents displaced by hard node failures: killed outright without
+    # Airlock, forced into secondary re-addressing with it
+    evicted: jax.Array
     # control-work op counters (multiplied by ns constants at summary time)
     op_dispatch: jax.Array
     op_eval: jax.Array
@@ -97,6 +103,7 @@ def bucket_upper_ms(i: np.ndarray) -> np.ndarray:
 class SimState(NamedTuple):
     t: jax.Array  # current tick (i32)
     key: jax.Array  # PRNG key
+    sched_key: jax.Array  # per-run arrival-schedule key (constant across ticks)
 
     # ---- probe / DA table (P,) ------------------------------------------
     st: jax.Array  # state machine code
@@ -136,6 +143,10 @@ class SimState(NamedTuple):
     next_rep: jax.Array  # next report tick
     amb: jax.Array  # ambient memory perturbation (AR(1), fraction of cap)
     rigid_mem: jax.Array  # rigid-topology resident memory (fraction of cap)
+    # scenario disruption process state
+    node_up: jax.Array  # (N,) bool: node currently serving
+    down_until: jax.Array  # (N,) i32 recovery tick while down
+    free0: jax.Array  # (N, W) painted free bitmap at init (recovery restore base)
 
     # ---- zone table (Z,) ---------------------------------------------------
     zstart: jax.Array
@@ -241,9 +252,12 @@ def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
     rep_interval = cfg.ticks(cfg.report_interval_ms + cfg.extra_sync_delay_ms)
     first_rep = rng.integers(0, rep_interval, size=N)
 
+    from repro.workloads.schedule import schedule_key
+
     return SimState(
         t=jnp.zeros((), jnp.int32),
         key=jax.random.PRNGKey(seed),
+        sched_key=schedule_key(seed),
         st=zero_p_i,
         zone=zero_p_i,
         node=jnp.full((P,), -1, jnp.int32),
@@ -279,6 +293,9 @@ def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
         next_rep=i32(first_rep),
         amb=jnp.zeros((N,), jnp.float32),
         rigid_mem=f32(rigid_atoms / cfg.atoms_per_node),
+        node_up=jnp.ones((N,), jnp.bool_),
+        down_until=jnp.zeros((N,), jnp.int32),
+        free0=jnp.asarray(free_words, jnp.uint32).reshape(N, W),
         zstart=i32(zstart),
         zcount=i32(zcount),
         zS=f32(zS0),

@@ -2,7 +2,10 @@
 
 All sampling is vectorized per tick: we draw ``max_arrivals_per_tick``
 candidate tasks and mask the first ``n`` of them by the Poisson draw, keeping
-the tick function fixed-shape.
+the tick function fixed-shape. Rows at index ``>= n`` are *inert*: the
+injection sites (engine and baselines) scatter only the first ``n`` rows, so
+a scenario schedule may modulate ``lam_per_tick`` tick-by-tick (traced
+scalar) without changing any shape.
 """
 
 from __future__ import annotations
@@ -33,7 +36,9 @@ def _choice(key, values, probs, shape):
     return v[idx]
 
 
-def sample_arrivals(cfg: LaminarConfig, key: jax.Array, lam_per_tick: float) -> ArrivalBatch:
+def sample_arrivals(
+    cfg: LaminarConfig, key: jax.Array, lam_per_tick: float | jax.Array
+) -> ArrivalBatch:
     w = cfg.workload
     n_max = cfg.max_arrivals_per_tick
     ks = jax.random.split(key, 10)

@@ -59,7 +59,13 @@ def report(cfg: LaminarConfig, s: SimState, key: jax.Array, view: NodeView) -> S
     """Fire due node reports (base interval + Gaussian jitter, 1% loss)."""
     k_loss, k_jit = jax.random.split(key)
     due = s.t >= s.next_rep
-    delivered = due & (jax.random.uniform(k_loss, (cfg.num_nodes,)) >= cfg.hop_loss)
+    # a disrupted (down) node cannot report: it goes silent, and the
+    # short-project / long-degrade rule makes it conservatively unattractive
+    delivered = (
+        due
+        & s.node_up
+        & (jax.random.uniform(k_loss, (cfg.num_nodes,)) >= cfg.hop_loss)
+    )
 
     s_true, h_true, run_true = view.s_true, view.h_true, view.run_true
 

@@ -1,0 +1,34 @@
+"""Scenario-programmable workloads: arrival-rate schedules + node disruption.
+
+This package turns the engine's single stationary Poisson intensity into a
+programmable *scenario*: a tick-indexed arrival-rate schedule (stationary,
+MMPP two-state bursty, diurnal sinusoid, flash-crowd spike train) composed
+with a correlated node disruption process (failures/drains + recoveries).
+Everything here is pure jax — fixed-shape, jit/vmap-compatible functions of
+``(t, key)`` plus explicitly-carried process state — and the package never
+imports ``repro.core`` (core imports *us*: ``LaminarConfig`` holds a
+:class:`ScenarioConfig` and the engine/baselines evaluate it inside their
+scans).
+"""
+
+from repro.workloads.disruption import DisruptionConfig, disruption_step
+from repro.workloads.schedule import (
+    ScheduleConfig,
+    rate_factor,
+    rate_per_tick,
+    schedule_key,
+    schedule_period_ticks,
+)
+from repro.workloads.scenario import SCENARIOS, ScenarioConfig
+
+__all__ = [
+    "DisruptionConfig",
+    "SCENARIOS",
+    "ScenarioConfig",
+    "ScheduleConfig",
+    "disruption_step",
+    "rate_factor",
+    "rate_per_tick",
+    "schedule_key",
+    "schedule_period_ticks",
+]

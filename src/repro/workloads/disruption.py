@@ -1,0 +1,70 @@
+"""Correlated node disruption process (failures / drains + recoveries).
+
+The *process* lives here as a pure fixed-shape transition over explicitly
+carried per-node state ``(node_up, down_until)``; the *application* of the
+resulting masks to a scheduler's tables (bitmap zeroing/restore, resident
+eviction, Airlock re-addressing) is the scheduler's job — ``repro.core.
+disrupt`` for the Laminar engine, ``repro.core.baselines.common`` for the
+baselines — so both sides consume the exact same event stream.
+
+Events are *correlated*: a failure event takes out one contiguous block of
+``fail_block`` nodes (wrapping at the array edge), the spatial signature of a
+rack/PDU loss or a preemption wave hitting one zone (cf. GFS, arXiv:
+2509.11134). Each downed node recovers deterministically ``downtime_ms``
+later. ``drain`` switches the semantics from hard failure (residents lost)
+to graceful drain (capacity withdrawn from *new* work only; residents run to
+completion and in-flight reservations may still land).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.workloads.schedule import _ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class DisruptionConfig:
+    """Node disruption process parameters (all static)."""
+
+    enabled: bool = False
+    fail_event_prob: float = 0.01  # per-tick P(correlated failure event)
+    fail_block: int = 8  # contiguous nodes taken out per event
+    downtime_ms: float = 80.0  # deterministic outage duration
+    drain: bool = False  # True: graceful drain (residents survive)
+
+
+def disruption_step(
+    d: DisruptionConfig,
+    node_up: jax.Array,  # (N,) bool
+    down_until: jax.Array,  # (N,) i32 recovery tick for down nodes
+    t: jax.Array,  # () i32
+    key: jax.Array,
+    dt_ms: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One tick of the disruption process.
+
+    Returns ``(node_up', down_until', fail, recover)`` where ``fail`` and
+    ``recover`` mark the nodes *transitioning* this tick. Recoveries are
+    resolved first, so a block landing on a just-recovered node can take it
+    straight back down (its ``down_until`` is then re-armed).
+    """
+    N = node_up.shape[0]
+    k_evt, k_site = jax.random.split(key)
+
+    recover = (~node_up) & (t >= down_until)
+    up = node_up | recover
+
+    event = jax.random.uniform(k_evt, ()) < d.fail_event_prob
+    start = jax.random.randint(k_site, (), 0, N)
+    lane = jnp.arange(N, dtype=jnp.int32)
+    in_block = ((lane - start) % N) < d.fail_block
+    fail = event & in_block & up
+
+    up = up & ~fail
+    down_until = jnp.where(fail, t + _ticks(d.downtime_ms, dt_ms), down_until)
+    return up, down_until, fail, recover

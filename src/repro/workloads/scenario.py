@@ -1,0 +1,64 @@
+"""ScenarioConfig: one arrival-rate schedule composed with one disruption
+process, plus the named presets the benchmarks and tests sweep.
+
+A scenario is *static* configuration: it is closed over by the jitted tick
+(like every other ``LaminarConfig`` field), and :meth:`ScenarioConfig.
+signature` is the hashable identity the engine's compiled-runner cache keys
+on — two scenarios differing in any schedule or disruption parameter must
+never share a compiled scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.workloads.disruption import DisruptionConfig
+from repro.workloads.schedule import ScheduleConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Composition of an arrival schedule and a node disruption process."""
+
+    name: str = "stationary"
+    schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
+    disruption: DisruptionConfig = dataclasses.field(
+        default_factory=DisruptionConfig
+    )
+
+    def signature(self) -> tuple:
+        """Full flattened parameter tuple — the compiled-runner cache key
+        component (NOT just the name: two presets could share a name)."""
+        return dataclasses.astuple(self)
+
+
+# ---------------------------------------------------------------------------
+# Named presets: the exp6 sweep and the regression net pin exactly these.
+# ---------------------------------------------------------------------------
+SCENARIOS = {
+    "stationary": ScenarioConfig(),
+    "bursty": ScenarioConfig(
+        name="bursty",
+        schedule=ScheduleConfig(kind="mmpp"),
+    ),
+    "diurnal": ScenarioConfig(
+        name="diurnal",
+        schedule=ScheduleConfig(kind="diurnal"),
+    ),
+    "flash": ScenarioConfig(
+        name="flash",
+        schedule=ScheduleConfig(kind="flash"),
+    ),
+    # capacity churn: stationary arrivals + correlated hard failures
+    "churn": ScenarioConfig(
+        name="churn",
+        disruption=DisruptionConfig(enabled=True, fail_event_prob=0.015),
+    ),
+    # the kitchen sink: bursty arrivals + correlated hard failures — the
+    # regime where probe-first + Airlock re-addressing is most stressed
+    "storm": ScenarioConfig(
+        name="storm",
+        schedule=ScheduleConfig(kind="mmpp"),
+        disruption=DisruptionConfig(enabled=True, fail_event_prob=0.015),
+    ),
+}

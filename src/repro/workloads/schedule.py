@@ -1,0 +1,124 @@
+"""Tick-indexed arrival-rate schedules.
+
+Each schedule is evaluated *inside* the scan as a pure function of
+``(t, key)`` — no carried process state, so the tick stays fixed-shape and
+the same schedule composes with ``jit``/``vmap`` (``run_batch`` gives every
+seed its own ``key`` and therefore its own burst placement). The returned
+value is a dimensionless *factor* multiplying the base per-tick intensity
+``lam_base`` that the engine derives from ``rho``; ``rate_per_tick`` clips
+the product into ``[0, lam_base * lam_max_factor]`` so no schedule can
+exceed the declared envelope.
+
+Kinds:
+
+* ``stationary`` — factor 1 (the pre-scenario behaviour, bit-for-bit).
+* ``mmpp`` — two-state Markov-modulated Poisson: time is cut into dwell
+  segments; each segment is independently in the burst state with
+  ``mmpp_burst_prob`` (sampled from ``fold_in(key, segment)``), giving
+  ``mmpp_hi_factor`` there and ``mmpp_lo_factor`` otherwise.
+* ``diurnal`` — ``1 + A * sin(2*pi*t/T)``; periodic with period ``T``.
+* ``flash`` — flash-crowd spike train: ``1 + amplitude`` inside a width-``w``
+  window at the start of every period, 1 elsewhere; periodic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Salt folded into PRNGKey(seed) to derive the per-run schedule key: the
+# schedule stream must be independent of the engine's per-tick state keys
+# and *constant across ticks* (an MMPP segment's state may not change
+# between the ticks that fall inside it).
+SCHED_SALT = 0x5CED
+
+KINDS = ("stationary", "mmpp", "diurnal", "flash")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Arrival-rate schedule parameters (all static)."""
+
+    kind: str = "stationary"
+    lam_max_factor: float = 8.0  # hard envelope: lam_t <= lam_base * this
+
+    # mmpp (two-state bursty)
+    mmpp_dwell_ms: float = 50.0  # segment length
+    mmpp_burst_prob: float = 0.3  # P(segment is in the burst state)
+    mmpp_lo_factor: float = 0.5
+    mmpp_hi_factor: float = 3.0
+
+    # diurnal sinusoid
+    diurnal_period_ms: float = 400.0
+    diurnal_amplitude: float = 0.8  # 0 <= A <= 1 keeps the factor >= 0
+
+    # flash-crowd spike train
+    flash_period_ms: float = 300.0
+    flash_width_ms: float = 20.0
+    flash_amplitude: float = 5.0  # factor = 1 + amplitude inside the spike
+
+
+def _ticks(ms: float, dt_ms: float) -> int:
+    return max(1, int(round(ms / dt_ms)))
+
+
+def schedule_key(seed: int) -> jax.Array:
+    """Per-run schedule key, derived from the seed (stable across ticks)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), SCHED_SALT)
+
+
+def rate_factor(
+    sched: ScheduleConfig, t: jax.Array, key: jax.Array, dt_ms: float
+) -> jax.Array:
+    """Dimensionless rate multiplier at tick ``t`` (f32 scalar, pure)."""
+    if sched.kind == "stationary":
+        return jnp.float32(1.0)
+    if sched.kind == "mmpp":
+        seg = (t // _ticks(sched.mmpp_dwell_ms, dt_ms)).astype(jnp.int32)
+        burst = jax.random.bernoulli(
+            jax.random.fold_in(key, seg), sched.mmpp_burst_prob
+        )
+        return jnp.where(
+            burst,
+            jnp.float32(sched.mmpp_hi_factor),
+            jnp.float32(sched.mmpp_lo_factor),
+        )
+    if sched.kind == "diurnal":
+        period = _ticks(sched.diurnal_period_ms, dt_ms)
+        phase = 2.0 * jnp.pi * (t % period).astype(jnp.float32) / period
+        return jnp.float32(1.0) + sched.diurnal_amplitude * jnp.sin(phase)
+    if sched.kind == "flash":
+        period = _ticks(sched.flash_period_ms, dt_ms)
+        width = _ticks(sched.flash_width_ms, dt_ms)
+        in_spike = (t % period) < width
+        return jnp.where(
+            in_spike, jnp.float32(1.0 + sched.flash_amplitude), jnp.float32(1.0)
+        )
+    raise ValueError(f"unknown schedule kind: {sched.kind!r} (one of {KINDS})")
+
+
+def rate_per_tick(
+    sched: ScheduleConfig,
+    lam_base: float,
+    t: jax.Array,
+    key: jax.Array,
+    dt_ms: float,
+) -> jax.Array:
+    """Per-tick arrival intensity, clipped into ``[0, lam_base * lam_max]``."""
+    factor = rate_factor(sched, t, key, dt_ms)
+    return jnp.clip(
+        jnp.float32(lam_base) * factor, 0.0, jnp.float32(lam_base * sched.lam_max_factor)
+    )
+
+
+def schedule_period_ticks(sched: ScheduleConfig, dt_ms: float) -> int | None:
+    """Claimed period in ticks (None where the schedule is not periodic)."""
+    if sched.kind == "diurnal":
+        return _ticks(sched.diurnal_period_ms, dt_ms)
+    if sched.kind == "flash":
+        return _ticks(sched.flash_period_ms, dt_ms)
+    if sched.kind == "stationary":
+        return 1
+    return None  # mmpp: random segment states, not periodic

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import LaminarConfig, LaminarEngine, MemoryConfig, hotpath
+from repro.core import LaminarConfig, LaminarEngine, MemoryConfig, SCENARIOS, hotpath
 from repro.core.state import RUNNING, SUSPENDED, init_state
 from repro.kernels.bitmap_fit import bitmap_fit, bitmap_fit_ref
 from repro.kernels.survival_scan import survival_scan, survival_scan_ref
@@ -262,3 +262,66 @@ def test_run_batch_matches_single_runs():
 def test_run_batch_rejects_empty():
     with pytest.raises(ValueError):
         LaminarEngine(SMALL).init_batch([])
+
+
+# ---------------------------------------------------------------------------
+# 4. exp6 scenarios: parity + batched geometry under schedules/disruption
+# ---------------------------------------------------------------------------
+
+STORM = dataclasses.replace(
+    EXP5, airlock=True, scenario=SCENARIOS["storm"]
+)  # MMPP bursty arrivals + correlated node failures
+
+
+def test_engine_exp6_scenario_pallas_parity():
+    """One short exp6 scenario (bursty + disruptions): the Pallas path must
+    reproduce the jnp path bit for bit while the scenario machinery (rate
+    schedule, node failures, forced re-addressing) is actually exercised."""
+    ref = LaminarEngine(dataclasses.replace(STORM, use_pallas=False)).run(seed=0)
+    pal = LaminarEngine(dataclasses.replace(STORM, use_pallas=True)).run(seed=0)
+    assert ref["node_failures"] > 0 and ref["node_recoveries"] > 0
+    assert ref["evicted"] > 0 and ref["suspended_cnt"] > 0
+    _assert_outputs_identical(ref, pal)
+
+
+def test_run_batch_scenarios_share_geometry():
+    """Under a scenario, run_batch still shares seeds[0] cluster geometry
+    across the whole batch (zones, painted bitmaps, disruption restore base)
+    while traffic AND scenario processes vary per seed via the PRNG keys."""
+    eng = LaminarEngine(STORM)
+    seeds = [0, 3, 7]
+    sb, _ = eng.init_batch(seeds)
+    for field in ("zstart", "zcount", "zmember", "zmask", "free", "free0",
+                  "node_up", "down_until", "rigid_mem"):
+        arr = np.asarray(getattr(sb, field))
+        for i in range(1, len(seeds)):
+            np.testing.assert_array_equal(arr[i], arr[0], err_msg=field)
+    # per-seed keys differ — including the schedule key (burst placement)
+    assert len({tuple(np.asarray(k).tolist()) for k in np.asarray(sb.sched_key)}) == 3
+
+    outs = eng.run_batch(seeds)
+    single = eng.run(seed=0)
+    for k, v in single.items():  # seed 0 of the batch == the single-seed run
+        if k == "timeseries":
+            for f in v:
+                np.testing.assert_array_equal(outs[0][k][f], v[f], err_msg=f)
+        elif k == "lat_hist":
+            np.testing.assert_array_equal(outs[0][k], v)
+        elif isinstance(v, float) and np.isnan(v):
+            assert np.isnan(outs[0][k]), k
+        else:
+            assert outs[0][k] == v, (k, outs[0][k], v)
+    assert len({o["arrived"] for o in outs}) > 1  # distinct trajectories
+
+
+def test_runner_cache_keys_on_scenario_signature():
+    """Two scenarios sharing lam/num_ticks must not share a compiled scan
+    (the pre-exp6 cache keyed on round(lam, 6) + num_ticks alone)."""
+    eng = LaminarEngine(SMALL)
+    n = len(eng._compiled)
+    r1 = eng._runner(3.0, 10)  # cfg default: stationary
+    r2 = eng._runner(3.0, 10, SCENARIOS["flash"])
+    r3 = eng._runner(3.0, 10, SCENARIOS["storm"])
+    assert len(eng._compiled) == n + 3
+    assert r1 is not r2 and r2 is not r3
+    assert eng._runner(3.0, 10, SCENARIOS["flash"]) is r2  # still cached

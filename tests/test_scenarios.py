@@ -1,0 +1,461 @@
+"""Scenario subsystem regression net: schedules, disruption, golden twins.
+
+Three layers:
+
+  1. generator invariants (hypothesis properties, each with a pinned
+     deterministic twin so the logic stays exercised without hypothesis):
+     arrival rows beyond ``n`` are inert; every schedule stays within
+     ``[0, lam_base * lam_max_factor]`` and is periodic where claimed; an
+     MMPP segment's state never changes mid-segment; disruption events never
+     increase node capacity; recovery restores the pre-failure bitmap
+     exactly (minus atoms still held by surviving residents).
+
+  2. disruption application semantics on hand-built states: hard failure
+     evicts residents into Airlock re-addressing (or kills them outright in
+     kernel-OOM mode); a drain leaves residents running.
+
+  3. pinned golden-metrics twins per scenario preset (small geometry, fixed
+     seed): rate-schedule or disruption drift fails loudly here instead of
+     silently shifting the exp6 benches. Goldens are exact integer metric
+     values, deterministic per platform + jax version; if a DELIBERATE
+     engine/scenario change moves them, re-pin via
+     ``python tests/test_scenarios.py`` (prints the current dict).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    DisruptionConfig,
+    LaminarConfig,
+    LaminarEngine,
+    MemoryConfig,
+    SCENARIOS,
+    ScenarioConfig,
+    ScheduleConfig,
+)
+from repro.core import disrupt, engine, workload
+from repro.core.state import EMPTY, RUNNING, SUSPENDED, init_state
+from repro.workloads import schedule as wls
+from repro.workloads.disruption import disruption_step
+
+DT = 0.5
+
+# ---------------------------------------------------------------------------
+# 1a. arrival rows beyond n are inert
+# ---------------------------------------------------------------------------
+
+ARR_CFG = LaminarConfig(
+    num_nodes=64,
+    zone_size=32,
+    probe_capacity=1024,
+    max_arrivals_per_tick=64,
+    rho=0.7,
+)
+
+
+def check_rows_beyond_n_inert(seed: int, lam: float):
+    key = jax.random.PRNGKey(seed)
+    k_batch, _, _ = jax.random.split(key, 3)
+    batch = workload.sample_arrivals(ARR_CFG, k_batch, lam)
+    beyond = jnp.arange(ARR_CFG.max_arrivals_per_tick) >= batch.n
+    tampered = batch._replace(
+        contig=jnp.where(beyond, True, batch.contig),
+        squat=jnp.where(beyond, True, batch.squat),
+        mass=jnp.where(beyond, 63, batch.mass),
+        ev=jnp.where(beyond, 1e6, batch.ev),
+        patience=jnp.where(beyond, 1e6, batch.patience),
+        service=jnp.where(beyond, 9999, batch.service),
+        pull=jnp.where(beyond, 9999, batch.pull),
+    )
+    s0 = init_state(ARR_CFG, 0)
+    a, mask_a = engine._inject_arrivals(ARR_CFG, s0, key, lam, batch=batch)
+    b, mask_b = engine._inject_arrivals(ARR_CFG, s0, key, lam, batch=tampered)
+    np.testing.assert_array_equal(np.asarray(mask_a), np.asarray(mask_b))
+    for leaf_a, leaf_b in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+def test_rows_beyond_n_inert_pinned():
+    check_rows_beyond_n_inert(seed=42, lam=7.5)
+    check_rows_beyond_n_inert(seed=7, lam=0.3)  # n == 0 ticks happen too
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.0, max_value=40.0))
+@settings(max_examples=25, deadline=None)
+def test_rows_beyond_n_inert_property(seed, lam):
+    check_rows_beyond_n_inert(seed, lam)
+
+
+# ---------------------------------------------------------------------------
+# 1b. schedule envelope + periodicity
+# ---------------------------------------------------------------------------
+
+ALL_KINDS = [SCENARIOS[n].schedule for n in ("stationary", "bursty", "diurnal", "flash")]
+
+
+def _rates(sched, lam_base, ts, seed=0):
+    key = wls.schedule_key(seed)
+    f = jax.jit(lambda t: wls.rate_per_tick(sched, lam_base, t, key, DT))
+    return np.asarray(jax.vmap(f)(jnp.asarray(ts, jnp.int32)))
+
+
+def check_schedule_envelope(sched: ScheduleConfig, lam_base: float, seed: int):
+    ts = np.arange(0, 5000, 7)
+    r = _rates(sched, lam_base, ts, seed)
+    assert (r >= 0.0).all()
+    assert (r <= lam_base * sched.lam_max_factor + 1e-4).all()
+    period = wls.schedule_period_ticks(sched, DT)
+    if period is not None:
+        np.testing.assert_allclose(
+            _rates(sched, lam_base, ts, seed),
+            _rates(sched, lam_base, ts + period, seed),
+            rtol=0,
+            atol=0,
+            err_msg=f"{sched.kind} not periodic with claimed period {period}",
+        )
+
+
+def test_schedule_envelope_pinned():
+    for sched in ALL_KINDS:
+        check_schedule_envelope(sched, lam_base=12.0, seed=0)
+    # stationary is exactly constant at the base rate
+    r = _rates(ScheduleConfig(), 12.0, np.arange(100))
+    np.testing.assert_array_equal(r, np.full(100, np.float32(12.0)))
+
+
+@given(
+    st.sampled_from(["stationary", "mmpp", "diurnal", "flash"]),
+    st.floats(min_value=0.01, max_value=500.0),
+    st.integers(min_value=0, max_value=1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_schedule_envelope_property(kind, lam_base, seed):
+    check_schedule_envelope(ScheduleConfig(kind=kind), lam_base, seed)
+
+
+def test_mmpp_two_state_segment_constant():
+    """The MMPP factor takes exactly the lo/hi values and never changes
+    inside a dwell segment (the pure-(t, key) derivation must be stable)."""
+    sched = SCENARIOS["bursty"].schedule
+    dwell = max(1, round(sched.mmpp_dwell_ms / DT))
+    r = _rates(sched, 1.0, np.arange(0, 40 * dwell), seed=3)
+    assert set(np.unique(r)) <= {
+        np.float32(sched.mmpp_lo_factor),
+        np.float32(sched.mmpp_hi_factor),
+    }
+    segs = r.reshape(40, dwell)
+    assert (segs == segs[:, :1]).all()  # constant within every segment
+    assert len(np.unique(segs[:, 0])) == 2  # both states occur in 40 segments
+
+
+def test_schedules_differ_per_seed_and_kind():
+    ts = np.arange(0, 4000, 13)
+    bursty = SCENARIOS["bursty"].schedule
+    assert not np.array_equal(_rates(bursty, 1.0, ts, 0), _rates(bursty, 1.0, ts, 1))
+    flash = _rates(SCENARIOS["flash"].schedule, 1.0, ts)
+    diurnal = _rates(SCENARIOS["diurnal"].schedule, 1.0, ts)
+    assert flash.max() > 1.0 and diurnal.max() > 1.0
+    assert not np.array_equal(flash, diurnal)
+
+
+# ---------------------------------------------------------------------------
+# 1c + 2. disruption process + application semantics
+# ---------------------------------------------------------------------------
+
+DCFG = LaminarConfig(
+    num_nodes=8,
+    zone_size=8,
+    probe_capacity=32,
+    max_arrivals_per_tick=8,
+    rigid_frac_lo=0.0,  # free0 is the full bitmap: restores are easy to read
+    rigid_frac_hi=0.0,
+    memory=MemoryConfig(enabled=True),
+    airlock=True,
+)
+FAIL_ALL = DisruptionConfig(enabled=True, fail_event_prob=1.0, fail_block=8,
+                            downtime_ms=10.0)
+T = 500
+
+
+def _scenario(d: DisruptionConfig) -> ScenarioConfig:
+    return ScenarioConfig(name="test", disruption=d)
+
+
+def _state(cfg=DCFG, *, t=T):
+    return init_state(cfg, 0)._replace(t=jnp.asarray(t, jnp.int32))
+
+
+def _resident(s, slot=0, node=1, word=0b1111, st_code=RUNNING, ev=48.0):
+    """Plant a resident holding ``word`` atoms at ``node``."""
+    return s._replace(
+        st=s.st.at[slot].set(st_code),
+        ev=s.ev.at[slot].set(ev),
+        mass=s.mass.at[slot].set(4),
+        alloc_node=s.alloc_node.at[slot].set(node),
+        alloc=s.alloc.at[slot, 0].set(jnp.uint32(word)),
+        free=s.free.at[node, 0].set(s.free[node, 0] & jnp.uint32(~word & 0xFFFFFFFF)),
+        service=s.service.at[slot].set(1000),
+        surv_deadline=s.surv_deadline.at[slot].set(1 << 24),
+    )
+
+
+def check_events_never_increase_capacity(seed: int):
+    s = _resident(_state())
+    before = np.asarray(s.free).copy()
+    s2, _ = disrupt.apply(DCFG, _scenario(FAIL_ALL), s, jax.random.PRNGKey(seed))
+    after = np.asarray(s2.free)
+    recover = ~np.asarray(s.node_up) & (T >= np.asarray(s.down_until))
+    grew = (after & ~before) != 0
+    assert not grew[~recover].any()  # only recovery may add capacity
+    assert int(s2.metrics.node_failures) == 8
+    assert not np.asarray(s2.node_up).any()
+    assert (np.asarray(s2.down_until) == T + round(10.0 / DCFG.dt_ms)).all()
+    assert (after == 0).all()  # every node failed -> zero advertised capacity
+
+
+def test_events_never_increase_capacity_pinned():
+    check_events_never_increase_capacity(0)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_events_never_increase_capacity_property(seed):
+    check_events_never_increase_capacity(seed)
+
+
+def check_recovery_restores_bitmap(down_node: int, holder_word: int):
+    """Fail->recover round trip restores the painted bitmap exactly, minus
+    atoms still held by surviving residents (drain mode keeps them)."""
+    quiet = DisruptionConfig(enabled=True, fail_event_prob=0.0, drain=True)
+    s = _state()
+    if holder_word:
+        s = _resident(s, node=down_node, word=holder_word)
+    # node mid-outage, due for recovery this tick
+    s = s._replace(
+        node_up=s.node_up.at[down_node].set(False),
+        down_until=s.down_until.at[down_node].set(T),
+        free=s.free.at[down_node].set(jnp.uint32(0)),
+    )
+    s2, _ = disrupt.apply(DCFG, _scenario(quiet), s, jax.random.PRNGKey(0))
+    assert bool(s2.node_up[down_node])
+    assert int(s2.metrics.node_recoveries) == 1
+    want = int(s.free0[down_node, 0]) & ~holder_word
+    assert int(s2.free[down_node, 0]) == want
+    # untouched nodes keep their bitmap bit-for-bit
+    mask = np.ones(DCFG.num_nodes, bool)
+    mask[down_node] = False
+    np.testing.assert_array_equal(np.asarray(s2.free)[mask], np.asarray(s.free)[mask])
+
+
+def test_recovery_restores_bitmap_pinned():
+    check_recovery_restores_bitmap(down_node=2, holder_word=0)  # exact restore
+    check_recovery_restores_bitmap(down_node=5, holder_word=0b110011)
+
+
+@given(
+    st.integers(min_value=0, max_value=7),
+    st.integers(min_value=0, max_value=(1 << 32) - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_recovery_restores_bitmap_property(down_node, holder_word):
+    check_recovery_restores_bitmap(down_node, holder_word)
+
+
+def test_hard_failure_forces_airlock_readdressing():
+    s = _resident(_state(), st_code=RUNNING, ev=96.0)
+    s2, dispatch = disrupt.apply(DCFG, _scenario(FAIL_ALL), s, jax.random.PRNGKey(1))
+    assert int(s2.st[0]) == SUSPENDED and bool(s2.migrating[0])
+    assert bool(dispatch[0])  # re-enters the network through TEG this tick
+    assert float(s2.patience[0]) == 96.0  # fresh E_patience = E_v
+    assert int(s2.surv_deadline[0]) == T + DCFG.ticks(DCFG.t_surv_ms)
+    assert int(s2.alloc[0, 0]) == 0 and int(s2.alloc_node[0]) == -1
+    assert int(s2.metrics.evicted) == 1
+
+
+def test_hard_failure_kills_without_airlock():
+    cfg = dataclasses.replace(DCFG, airlock=False)
+    s = _resident(_state(cfg))
+    s2, dispatch = disrupt.apply(cfg, _scenario(FAIL_ALL), s, jax.random.PRNGKey(1))
+    assert int(s2.st[0]) == EMPTY
+    assert not bool(dispatch[0])
+    assert int(s2.metrics.evicted) == 1
+
+
+def test_hard_failure_drops_inflight_migrant_source_alloc():
+    """A migrating incarnation whose control probe is in flight when its
+    source node dies loses the source allocation exactly like a glass-state
+    resident — but keeps flying (no state flip, no extra dispatch) and is
+    not double-counted as evicted."""
+    from repro.core.state import ADDRESSING
+
+    s = _resident(_state(), st_code=ADDRESSING)
+    s = s._replace(migrating=s.migrating.at[0].set(True))
+    s2, dispatch = disrupt.apply(DCFG, _scenario(FAIL_ALL), s, jax.random.PRNGKey(1))
+    assert int(s2.st[0]) == ADDRESSING and bool(s2.migrating[0])
+    assert int(s2.alloc[0, 0]) == 0 and int(s2.alloc_node[0]) == -1
+    assert not bool(dispatch[0])
+    assert int(s2.metrics.evicted) == 1  # displaced residents incl. this one
+
+
+def test_drain_leaves_residents_running():
+    drain = DisruptionConfig(enabled=True, fail_event_prob=1.0, fail_block=8,
+                             downtime_ms=10.0, drain=True)
+    s = _resident(_state())
+    s2, dispatch = disrupt.apply(DCFG, _scenario(drain), s, jax.random.PRNGKey(1))
+    assert int(s2.st[0]) == RUNNING
+    assert int(s2.alloc[0, 0]) != 0  # keeps its atoms
+    assert int(s2.metrics.evicted) == 0
+    assert not np.asarray(dispatch).any()
+    assert (np.asarray(s2.free) == 0).all()  # but no capacity for new work
+
+
+def test_disruption_step_block_is_contiguous():
+    d = DisruptionConfig(enabled=True, fail_event_prob=1.0, fail_block=3)
+    up = jnp.ones((16,), jnp.bool_)
+    dn = jnp.zeros((16,), jnp.int32)
+    up2, _, fail, recover = disruption_step(d, up, dn, jnp.asarray(7, jnp.int32),
+                                            jax.random.PRNGKey(5), DT)
+    f = np.asarray(fail)
+    assert f.sum() == 3 and not np.asarray(recover).any()
+    idx = np.flatnonzero(f)
+    assert set((np.diff(sorted((idx - idx[0]) % 16)))) <= {1}  # contiguous mod N
+    assert (~np.asarray(up2) == f).all()
+
+
+# ---------------------------------------------------------------------------
+# 3. pinned golden-metrics twins per scenario preset
+# ---------------------------------------------------------------------------
+
+GOLD_CFG = LaminarConfig(
+    num_nodes=64,
+    zone_size=32,
+    probe_capacity=1024,
+    max_arrivals_per_tick=64,
+    horizon_ms=200.0,
+    rho=0.8,
+    memory=MemoryConfig(enabled=True),
+    airlock=True,
+)
+
+GOLD_FIELDS = (
+    "arrived",
+    "started",
+    "completed",
+    "fastfail",
+    "timeout",
+    "suspended_cnt",
+    "resumed_insitu",
+    "reactivated",
+    "migrated",
+    "reclaimed",
+    "node_failures",
+    "node_recoveries",
+    "evicted",
+)
+
+# exact integer metrics at seed 0 — regenerate with `python tests/test_scenarios.py`
+GOLDEN = {
+    'bursty': {'arrived': 3663, 'started': 3609, 'completed': 3198, 'fastfail': 0, 'timeout': 0, 'suspended_cnt': 3228, 'resumed_insitu': 3047, 'reactivated': 11, 'migrated': 7, 'reclaimed': 0, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'churn': {'arrived': 4900, 'started': 4017, 'completed': 3473, 'fastfail': 413, 'timeout': 0, 'suspended_cnt': 5274, 'resumed_insitu': 4895, 'reactivated': 87, 'migrated': 227, 'reclaimed': 7, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 206},
+    'diurnal': {'arrived': 5995, 'started': 5358, 'completed': 4746, 'fastfail': 232, 'timeout': 0, 'suspended_cnt': 7780, 'resumed_insitu': 7358, 'reactivated': 105, 'migrated': 83, 'reclaimed': 3, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'flash': {'arrived': 6259, 'started': 5643, 'completed': 5053, 'fastfail': 182, 'timeout': 0, 'suspended_cnt': 8312, 'resumed_insitu': 7906, 'reactivated': 118, 'migrated': 98, 'reclaimed': 1, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'stationary': {'arrived': 5793, 'started': 5232, 'completed': 4619, 'fastfail': 154, 'timeout': 0, 'suspended_cnt': 7541, 'resumed_insitu': 7089, 'reactivated': 107, 'migrated': 84, 'reclaimed': 1, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'storm': {'arrived': 3613, 'started': 3231, 'completed': 2878, 'fastfail': 288, 'timeout': 0, 'suspended_cnt': 3117, 'resumed_insitu': 2910, 'reactivated': 33, 'migrated': 159, 'reclaimed': 2, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 133},
+}
+
+
+def _current(name: str) -> dict:
+    cfg = dataclasses.replace(GOLD_CFG, scenario=SCENARIOS[name])
+    out = LaminarEngine(cfg).run(seed=0)
+    return {k: int(out[k]) for k in GOLD_FIELDS}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_golden_metrics(name):
+    got = _current(name)
+    assert got == GOLDEN[name], (
+        f"scenario {name!r} drifted from its golden twin.\n"
+        f"  got:    {got}\n  pinned: {GOLDEN[name]}\n"
+        "If this change is deliberate, re-pin: python tests/test_scenarios.py"
+    )
+
+
+def test_golden_scenarios_are_distinct():
+    """The presets must actually produce different dynamics, or the net
+    would pin six copies of the stationary run."""
+    assert len({tuple(sorted(g.items())) for g in GOLDEN.values()}) == len(GOLDEN)
+    for name in ("churn", "storm"):
+        assert GOLDEN[name]["node_failures"] > 0
+        assert GOLDEN[name]["evicted"] > 0
+    for name in ("stationary", "bursty", "diurnal", "flash"):
+        assert GOLDEN[name]["node_failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 3b. baselines under a scenario: the fairness path is pinned too
+# ---------------------------------------------------------------------------
+
+BASE_GOLD_CFG = LaminarConfig(
+    num_nodes=128,
+    zone_size=32,
+    probe_capacity=2048,
+    max_arrivals_per_tick=128,
+    horizon_ms=200.0,
+    rho=0.6,
+    scenario=SCENARIOS["storm"],
+)
+BASE_GOLD_FIELDS = ("arrived", "started", "completed", "failed", "timeout", "dropped")
+
+# exact integer metrics at seed 0 — regenerate with `python tests/test_scenarios.py`
+BASELINE_GOLDEN = {
+    'slurm': {'arrived': 5475, 'started': 5475, 'completed': 5054, 'failed': 131, 'timeout': 0, 'dropped': 0},
+    'ray': {'arrived': 5379, 'started': 5378, 'completed': 4984, 'failed': 51, 'timeout': 0, 'dropped': 0},
+    'flux': {'arrived': 5575, 'started': 5318, 'completed': 4787, 'failed': 246, 'timeout': 0, 'dropped': 0},
+}
+
+
+def _current_baseline(name: str) -> dict:
+    from repro.core.baselines import RUNNERS
+
+    out = RUNNERS[name](BASE_GOLD_CFG, seed=0, capacity=1 << 12)
+    return {k: int(out[k]) for k in BASE_GOLD_FIELDS}
+
+
+@pytest.mark.parametrize("name", ["slurm", "ray", "flux"])
+def test_baseline_scenario_golden_metrics(name):
+    """The baselines consume the same schedule + disruption stream as the
+    engine (head-to-head fairness); pin their storm trajectories so a break
+    in the baseline scenario threading fails loudly."""
+    got = _current_baseline(name)
+    assert got == BASELINE_GOLDEN[name], (
+        f"baseline {name!r} drifted under SCENARIOS['storm'].\n"
+        f"  got:    {got}\n  pinned: {BASELINE_GOLDEN[name]}\n"
+        "If this change is deliberate, re-pin: python tests/test_scenarios.py"
+    )
+    assert got["failed"] > 0  # node failures actually killed residents
+
+
+def _pin():
+    GOLDEN.update({name: _current(name) for name in sorted(SCENARIOS)})
+    BASELINE_GOLDEN.update(
+        {name: _current_baseline(name) for name in ("slurm", "ray", "flux")}
+    )
+
+
+if __name__ == "__main__":
+    _pin()
+    print("GOLDEN = {")
+    for name, g in GOLDEN.items():
+        print(f"    {name!r}: {g},")
+    print("}")
+    print("BASELINE_GOLDEN = {")
+    for name, g in BASELINE_GOLDEN.items():
+        print(f"    {name!r}: {g},")
+    print("}")
