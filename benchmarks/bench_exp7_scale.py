@@ -1,0 +1,177 @@
+"""Exp7: zone-sharded scale-out — ticks/sec and cross-shard traffic vs
+cluster size and device count.
+
+The paper's central claim is near-O(1) hot-path control-plane work *at
+exascale*; the flat engine caps the reachable geometry at one device. This
+sweep runs the zone-sharded engine (``repro.parallel.engine_mesh.
+ZoneShardedEngine``: zone-blocked node plane under ``shard_map``, replicated
+probe plane, exact-gather exchange) over ``num_nodes`` x ``num_devices``
+cells and records, per cell:
+
+  * ``ticks_per_s`` — simulation throughput after compilation (the sharded
+    node-bitmap pipeline is the per-tick FLOP hog, so device count should
+    pay off as nodes grow);
+  * ``control_plane_bytes_per_tick`` — the modeled Laminar control plane:
+    the (zS, zH) zone-aggregate table broadcast on TEG refresh ticks.
+    O(num_zones) floats, independent of ``num_nodes`` at fixed zone count —
+    this is the paper's decentralization cost model, now measured;
+  * ``sim_sync_bytes_per_tick`` — the simulator-fidelity exchange (per-node
+    results feeding the replicated probe plane). O(num_nodes), reported
+    separately and explicitly NOT part of the modeled control plane (on
+    real hardware those are node-local reads by in-zone probes).
+
+Each cell runs in a fresh subprocess so the host-platform device count can
+be forced per cell on CPU (``XLA_FLAGS=--xla_force_host_platform_device_
+count=D``); real multi-device backends use their native devices. Default
+sweep is CPU-tractable (1k/4k nodes x 1/2 devices); ``--full`` extends to
+{1k, 4k, 16k, 64k} x {1, max}. ``EXP7_NODES`` / ``EXP7_DEVICES`` (comma
+lists) override the grid — the CI smoke pins ``EXP7_NODES=1024``,
+``EXP7_DEVICES=1,2``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import emit, row_str
+
+# measured ticks per cell: enough to amortize per-call dispatch, small
+# enough that a 64k-node CPU cell stays in minutes
+NUM_TICKS = 100
+
+_CELL = """
+import os
+if {force_devices} > 0:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count={force_devices}"
+    )
+import json, time
+import jax
+from benchmarks.common import bench_cfg
+from repro.core.engine import summarize
+from repro.parallel.engine_mesh import ZoneShardedEngine
+
+cfg = bench_cfg(num_nodes={nodes})
+eng = ZoneShardedEngine(cfg, num_devices={devices})
+# time ONLY the compiled scan: init/summarize are identical Python-side
+# costs across device counts and would dilute the sharding contrast
+s0, lam = eng.init(seed={seed})
+runner = eng._runner(lam, {num_ticks})
+jax.block_until_ready(runner(s0))              # compile + first run
+t0 = time.time()
+final, ts = jax.block_until_ready(runner(s0))  # measured
+wall = time.time() - t0
+import numpy as np
+out = summarize(cfg, final, np.asarray(ts))
+row = eng.traffic(seed={seed})
+row.update(
+    num_nodes={nodes},
+    num_ticks={num_ticks},
+    seed={seed},
+    ticks_per_s={num_ticks} / wall,
+    wall_s=wall,
+    arrived=int(out["arrived"]),
+    started=int(out["started"]),
+    backend=jax.default_backend(),
+)
+print("EXP7ROW " + json.dumps(row))
+"""
+
+
+def _parse_grid(env: str, default: list[int]) -> list[int]:
+    raw = os.environ.get(env)
+    return [int(x) for x in raw.split(",")] if raw else default
+
+
+def _run_cell(nodes: int, devices: int, repo: str, seed: int) -> dict:
+    import jax
+
+    on_cpu = jax.default_backend() == "cpu"
+    force = devices if (on_cpu and devices > 1) else 0
+    code = _CELL.format(
+        force_devices=force,
+        nodes=nodes,
+        devices=devices,
+        num_ticks=NUM_TICKS,
+        seed=seed,
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), repo, env.get("PYTHONPATH")) if p
+    )
+    if on_cpu:
+        env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=3600,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"exp7 cell nodes={nodes} devices={devices} failed:\n{out.stderr[-3000:]}"
+        )
+    line = [l for l in out.stdout.splitlines() if l.startswith("EXP7ROW ")][-1]
+    return json.loads(line[len("EXP7ROW ") :])
+
+
+def run(full: bool = False, seed: int = 0) -> None:
+    import jax
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    on_cpu = jax.default_backend() == "cpu"
+    # CPU forces host-platform devices per cell; other backends are capped
+    # by the real device count
+    max_dev = max(2, len(jax.devices())) if on_cpu else len(jax.devices())
+    if full:
+        nodes_grid = [1024, 4096, 16384, 65536]
+        dev_grid = sorted({1, max_dev})
+    else:
+        nodes_grid = [1024, 4096]
+        dev_grid = sorted({1, min(2, max_dev)})
+    nodes_grid = _parse_grid("EXP7_NODES", nodes_grid)
+    dev_grid = sorted(set(_parse_grid("EXP7_DEVICES", dev_grid)))
+    if not on_cpu:
+        dev_grid = [d for d in dev_grid if d <= len(jax.devices())] or [1]
+
+    t0 = time.time()
+    rows = []
+    for nodes in nodes_grid:
+        for devices in dev_grid:
+            row = _run_cell(nodes, devices, repo, seed)
+            rows.append(row)
+            print(
+                "  exp7:",
+                row_str(
+                    row,
+                    (
+                        "num_nodes",
+                        "num_zones",
+                        "num_devices",
+                        "ticks_per_s",
+                        "control_plane_bytes_per_tick",
+                        "sim_sync_bytes_per_tick",
+                    ),
+                ),
+            )
+    top = rows[-1]
+    emit(
+        "exp7_scale",
+        rows,
+        t0,
+        derived=(
+            f"N={top['num_nodes']} D={top['num_devices']} "
+            f"ticks/s={top['ticks_per_s']:.2f} "
+            f"ctrl_B/tick={top['control_plane_bytes_per_tick']:.0f}"
+        ),
+    )
+
+
+if __name__ == "__main__":
+    run(full="--full" in sys.argv)

@@ -23,6 +23,7 @@ from benchmarks import (
     bench_exp4_ablations,
     bench_exp5_airlock,
     bench_exp6_scenarios,
+    bench_exp7_scale,
     bench_hotpath,
     bench_moe_router,
     bench_serving,
@@ -36,6 +37,7 @@ BENCHES = {
     "exp4": bench_exp4_ablations.run,
     "exp5": bench_exp5_airlock.run,
     "exp6": bench_exp6_scenarios.run,
+    "exp7": bench_exp7_scale.run,
     "control_work": bench_control_work.run,
     "hotpath": bench_hotpath.run,
     "moe_router": bench_moe_router.run,

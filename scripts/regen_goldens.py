@@ -1,0 +1,107 @@
+"""Regenerate every pinned golden block in the test suite, in place.
+
+One entry point for all golden-pinned regression nets:
+
+  * ``tests/test_scenarios.py``  — ``GOLDEN`` (engine metrics per scenario
+    preset) and ``BASELINE_GOLDEN`` (baseline metrics under storm);
+  * ``tests/test_shard_engine.py`` — ``GOLDEN_TRAFFIC`` (cross-shard
+    traffic model reference rows).
+
+Usage (after a DELIBERATE engine/scenario/traffic-model change):
+
+    PYTHONPATH=src python scripts/regen_goldens.py          # rewrite all
+    PYTHONPATH=src python scripts/regen_goldens.py --check  # dry run, diff
+
+The script recomputes each golden via the owning test module's ``_pin()``
+hook and rewrites the ``NAME = {...}`` literal block in the test source, so
+``git diff`` shows exactly what moved. Goldens are exact integer/float
+values, deterministic per platform + jax version.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+TESTS = ROOT / "tests"
+
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(TESTS))
+
+
+def _fmt_block(name: str, value: dict) -> str:
+    lines = [f"{name} = {{"]
+    for k in sorted(value):
+        lines.append(f"    {k!r}: {value[k]!r},")
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def replace_literal(path: Path, name: str, value: dict, check: bool) -> bool:
+    """Rewrite the ``NAME = {...}`` top-level block in ``path``.
+
+    Returns True when the block changed. The pattern anchors on column-0
+    ``NAME = {`` and the first column-0 closing brace, so nested dict
+    values stay inside the match.
+    """
+    src = path.read_text()
+    pat = re.compile(rf"^{re.escape(name)} = \{{\n(?:.*\n)*?\}}", re.MULTILINE)
+    m = pat.search(src)
+    if not m:
+        raise SystemExit(f"{path}: pinned block {name!r} not found")
+    # drift means the VALUES moved, not the literal's formatting
+    old_value = ast.literal_eval(m.group(0).split("=", 1)[1].strip())
+    changed = old_value != value
+    if changed and not check:
+        path.write_text(src[: m.start()] + _fmt_block(name, value) + src[m.end() :])
+    status = "drifted" if changed else "unchanged"
+    print(f"  {path.relative_to(ROOT)}:{name}: {status}")
+    return changed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="recompute and report drift without rewriting the test files",
+    )
+    args = ap.parse_args(argv)
+
+    changed = False
+
+    print("recomputing scenario + baseline goldens (tests/test_scenarios.py)...")
+    import test_scenarios
+
+    test_scenarios._pin()
+    changed |= replace_literal(
+        TESTS / "test_scenarios.py", "GOLDEN", test_scenarios.GOLDEN, args.check
+    )
+    changed |= replace_literal(
+        TESTS / "test_scenarios.py",
+        "BASELINE_GOLDEN",
+        test_scenarios.BASELINE_GOLDEN,
+        args.check,
+    )
+
+    print("recomputing shard traffic goldens (tests/test_shard_engine.py)...")
+    import test_shard_engine
+
+    for name, value in test_shard_engine._pin().items():
+        changed |= replace_literal(
+            TESTS / "test_shard_engine.py", name, value, args.check
+        )
+
+    if args.check and changed:
+        print("goldens drifted (run without --check to re-pin)")
+        return 1
+    print("done" + (" (dry run)" if args.check else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

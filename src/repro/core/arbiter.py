@@ -57,11 +57,20 @@ def arbitrate(
     key: jax.Array,
     throttled: jax.Array,
     bits: jax.Array,
+    plane=None,
 ):
     """One admission round per node: highest-E_v queued DA, bitmap-feasible.
 
     Takes and returns the (N, A) free bit-plane so multiple rounds per tick
-    avoid re-unpacking the word bitmap. Returns (state, bits')."""
+    avoid re-unpacking the word bitmap. Returns (state, bits').
+
+    ``plane`` routes the node-plane math (feasibility + allocation on the
+    bit plane) through a strategy object: the zone-sharded engine computes
+    it on its local zone block and exchanges only the per-node result words
+    (``repro.parallel.engine_mesh.MeshPlane``). With ``plane=None`` the math
+    runs inline on the flat (N, A) plane — today's path, bit for bit; in
+    that case ``bits`` is the flat plane, otherwise it is whatever blocked
+    representation the plane threads across rounds."""
     P = s.st.shape[0]
     N = cfg.num_nodes
     node_c = jnp.clip(s.node, 0, N - 1)
@@ -94,15 +103,20 @@ def arbitrate(
     # (the parity tests enforce it); the AND is a guard so a kernel
     # regression could only reject admissions, never reserve a probe with
     # an empty atom mask.
-    feas_hot = hotpath.bitmap_fit(cfg, s.free, s.mass[ws], s.contig[ws], bits=bits) != 0
-    alloc_bits, feas_n = bitmap.alloc_for_class(
-        bits, s.mass[ws], s.contig[ws], policy=cfg.alloc_policy
-    )
-    feas_n = feas_n & feas_hot & has_w
-    taken = alloc_bits & feas_n[:, None]
-    alloc_words_n = bitmap.pack_bits(taken)
+    if plane is None:
+        feas_hot = (
+            hotpath.bitmap_fit(cfg, s.free, s.mass[ws], s.contig[ws], bits=bits) != 0
+        )
+        alloc_bits, feas_n = bitmap.alloc_for_class(
+            bits, s.mass[ws], s.contig[ws], policy=cfg.alloc_policy
+        )
+        feas_n = feas_n & feas_hot & has_w
+        taken = alloc_bits & feas_n[:, None]
+        alloc_words_n = bitmap.pack_bits(taken)
+        bits = bits & ~taken
+    else:
+        alloc_words_n, feas_n, bits = plane.alloc_round(cfg, s, bits, ws, has_w)
     free = s.free & ~alloc_words_n
-    bits = bits & ~taken
 
     admit = winner & feas_n[node_c]
     reject = winner & ~admit

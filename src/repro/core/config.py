@@ -179,7 +179,13 @@ class LaminarConfig:
 
     @property
     def num_zones(self) -> int:
-        return max(1, self.num_nodes // self.zone_size)
+        """A-priori zone-count estimate for buffer sizing.
+
+        Ceiling division: a non-divisible geometry pads the trailing partial
+        zone instead of truncating it, so every node is covered by a zone.
+        (The true zone count, after jitter, is ``len(state.zcount)``.)
+        """
+        return max(1, -(-self.num_nodes // self.zone_size))
 
     def arrival_rate_per_s(self, free_atoms: float) -> float:
         """Open-loop lambda such that rho = lambda / mu (mu = ideal capacity)."""

@@ -8,6 +8,13 @@ lost probes (bounded instances, quiet interval).
 Phase II (resident sentinel) and Phase III (secondary reactivation) are
 state-machine modes handled by ``arbiter``/``airlock``; a migrating DA re-uses
 exactly this addressing path (same utility field, same bounded search).
+
+Sharding contract: the probe table is replicated under the zone-sharded
+engine, and ``address`` gathers candidates from replicated node-float
+arrays (the reported Z-HAF field plus the all-gathered true view), so a
+probe can evaluate candidates in ANY zone without cross-shard traffic —
+this is what lets probes hop zones every tick while the node-bitmap plane
+stays sharded.
 """
 
 from __future__ import annotations

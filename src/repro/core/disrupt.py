@@ -27,7 +27,11 @@ consequences inside the engine's tables:
 
 This stage runs after ``arbiter.completions`` and before
 ``zhaf.build_view`` so the node view, reports and every arbitration round of
-the tick see the post-disruption bitmaps. (Frees that land on a down node
+the tick see the post-disruption bitmaps. It operates entirely on the
+replicated (N, W) word bitmaps and integer scatters — never on the
+zone-blocked bit plane — so it is shard-transparent: the sharded engine
+runs it replicated, and the blocked plane (built afterwards) sees the
+post-disruption words. (Frees that land on a down node
 later in the tick — e.g. a migration landing whose *source* is down — are
 re-zeroed here before the next tick's view, so no admission can ever consume
 them.)

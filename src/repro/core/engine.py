@@ -126,13 +126,25 @@ def _inject_arrivals(
 
 
 def make_step(
-    cfg: LaminarConfig, lam_per_tick: float, scenario: ScenarioConfig | None = None
+    cfg: LaminarConfig,
+    lam_per_tick: float,
+    scenario: ScenarioConfig | None = None,
+    plane=None,
 ):
     """Build the one-tick transition (cfg, lambda and scenario closed over).
 
     ``scenario`` defaults to ``cfg.scenario``; a stationary, disruption-free
     scenario reproduces the pre-scenario tick bit-for-bit (same key splits,
     same arrival stream).
+
+    ``plane`` selects the node-plane execution strategy. ``None`` (default)
+    runs the flat single-device path. The zone-sharded scale-out engine
+    (``repro.parallel.engine_mesh``) passes a ``MeshPlane`` so the heavy
+    per-node bitmap pipeline (view build, feasibility, allocation, zone
+    aggregation) runs on each device's zone block inside ``shard_map``,
+    while the probe table and all O(N) float vectors stay replicated — the
+    replicated math is deterministic, so every device computes identical
+    probe-plane results and the two layouts agree bit for bit.
     """
     scenario = cfg.scenario if scenario is None else scenario
     sched = scenario.schedule
@@ -170,11 +182,15 @@ def make_step(
             evict_mask = jnp.zeros_like(s.migrating)
 
         # ---- true node state, computed once per tick ---------------------------
-        view = zhaf.build_view(cfg, s)
+        if plane is None:
+            view = zhaf.build_view(cfg, s)
+            bits = view.bits
+        else:
+            view, bits = plane.build_view(cfg, s)
 
         # ---- cold path: state dissemination -------------------------------
         s = zhaf.report(cfg, s, ks[0], view)
-        s = teg.refresh(cfg, s)
+        s = teg.refresh(cfg, s, plane)
 
         # ---- admissions hot path ----------------------------------------------
         if sched.kind == "stationary":
@@ -196,9 +212,8 @@ def make_step(
         )
         # multiple admission rounds per tick: after each reservation the node
         # removes the winner's atoms and proceeds to the next feasible candidate
-        bits = view.bits
         for _ in range(cfg.arb_rounds):
-            s, bits = arbiter.arbitrate(cfg, s, ks[6], throttled, bits)
+            s, bits = arbiter.arbitrate(cfg, s, ks[6], throttled, bits, plane)
         s = arbiter.pending_stage(cfg, s)
         s = arbiter.timeouts(cfg, s)
 
@@ -338,6 +353,13 @@ def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, 
     ctl = (((st > EMPTY) & (st < RUNNING)) | (st == LOST_WAIT)) & ~mig
     in_flight = int(ctl.sum())
     in_flight_nonsquat = int((ctl & ~squat).sum())
+    # started tasks still alive at the horizon: executing, in glass-state, or
+    # a migrating incarnation anywhere in its secondary-reactivation epoch
+    from repro.core.state import SUSPENDED
+
+    resident_end = int(
+        (((st == RUNNING) | (st == SUSPENDED)) | (mig & (st != EMPTY))).sum()
+    )
 
     hist = np.asarray(m.lat_hist, np.float64)
     total = hist.sum()
@@ -378,6 +400,7 @@ def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, 
         start_success_nonsquat=float(m.started)
         / max(arrived - int(m.arrived_squat) - in_flight_nonsquat, 1),
         in_flight_end=in_flight,
+        resident_end=resident_end,
         completed_success_ratio=float(m.completed)
         / max(arrived - in_flight, 1),
         exec_survival_ratio=1.0

@@ -20,6 +20,13 @@ there is no runtime dispatch cost. Engine call sites (``arbiter``, ``da``,
 ``teg``, ``airlock``/``engine`` for the survival scan) go through this
 module only; a kernel optimization is therefore a one-file change that the
 parity tests and ``bench_hotpath`` pick up automatically.
+
+The node-indexed ops (``bitmap_fit``, ``zone_aggregate``) serve both
+layouts with the same kernels: they grid over rows, so the zone-sharded
+engine's blocked node plane (``repro.parallel.engine_mesh.MeshPlane``)
+passes its local zone-block rows through these exact entry points and gets
+bit-identical per-row results. The probe-indexed ops (``utility_topk``,
+``survival_scan``) run replicated under the mesh.
 """
 
 from __future__ import annotations
@@ -36,7 +43,13 @@ from repro.kernels.survival_scan import ref as _surv_ref
 from repro.kernels.utility_topk import ops as _topk_ops
 from repro.kernels.zone_aggregate import ops as _agg_ops
 
-__all__ = ["bitmap_fit", "survival_scan", "utility_topk", "zone_aggregate"]
+__all__ = [
+    "bitmap_fit",
+    "bitmap_fit_blocked",
+    "survival_scan",
+    "utility_topk",
+    "zone_aggregate",
+]
 
 # the survival_scan kernel package hardcodes the state-machine codes to stay
 # importable without repro.core; fail loudly here if they ever drift
@@ -71,6 +84,30 @@ def bitmap_fit(
         jnp.sum(bits, axis=-1), _bitmap.max_run(bits), m, contig.astype(bool)
     )
     return (ok | (m == 0)).astype(jnp.int32)
+
+
+def bitmap_fit_blocked(
+    cfg: LaminarConfig,
+    words: jax.Array | None,
+    mass: jax.Array,
+    contig: jax.Array,
+    bits: jax.Array | None = None,
+) -> jax.Array:
+    """Zone-blocked feasibility: ``(Z, M)`` inputs, ``(Z, M)`` int32 out.
+
+    The zone-sharded engine's production path for its local zone block.
+    The pallas route is the SAME kernel gridded over block rows
+    (``ops.bitmap_fit_blocked``); the jnp route reuses :func:`bitmap_fit`
+    on the flattened rows, so per-row results are bit-identical to the
+    flat layout in both modes. ``bits`` is the flattened ``(Z*M, A)`` bit
+    plane (jnp path); ``words`` the ``(Z, M, W)`` word plane (pallas path).
+    """
+    if cfg.use_pallas:
+        return _bitmap_ops.bitmap_fit_blocked(words, mass, contig)
+    Z, M = mass.shape
+    return bitmap_fit(
+        cfg, None, mass.reshape(-1), contig.reshape(-1), bits=bits
+    ).reshape(Z, M)
 
 
 def utility_topk(

@@ -190,6 +190,47 @@ def densify_zones(starts: np.ndarray, counts: np.ndarray):
     return member, mask.astype(np.float32)
 
 
+# ---------------------------------------------------------------------------
+# zone-blocked layout: flat node-major (N, ...) <-> padded (Z, M, ...)
+# ---------------------------------------------------------------------------
+# The scale-out engine (repro.parallel.engine_mesh) shards the node-plane
+# computation along the zone axis. Zones are heterogeneous, so the blocked
+# layout is PADDED: row z holds zone z's nodes in slots [0, zcount[z]) and
+# inert fill elsewhere. ``pack_zoned`` / ``unpack_zoned`` are exact inverses
+# on the valid slots; padding slots always carry ``fill`` so a round trip
+# through the flat layout reproduces a canonical blocked array bit-for-bit.
+
+
+def pack_zoned(
+    x: jax.Array, zmember: jax.Array, zmask: jax.Array, fill=0
+) -> jax.Array:
+    """Flat node-major ``(N, ...)`` -> padded zone-blocked ``(Z, M, ...)``.
+
+    Valid slots gather their node's row; padding slots are set to ``fill``
+    (inert — they never re-enter the flat layout)."""
+    v = x[zmember]  # (Z, M, ...)
+    mask = (zmask > 0).reshape(zmask.shape + (1,) * (v.ndim - zmask.ndim))
+    return jnp.where(mask, v, jnp.asarray(fill, v.dtype))
+
+
+def unpack_zoned(
+    xb: jax.Array, zmember: jax.Array, zmask: jax.Array, num_nodes: int
+) -> jax.Array:
+    """Padded zone-blocked ``(Z, M, ...)`` -> flat node-major ``(N, ...)``.
+
+    Every node occupies exactly one valid slot, so the scatter writes each
+    flat row exactly once; padding slots are dropped (scattered out of
+    bounds), never clobbering node 0 despite pointing at it in ``zmember``.
+    ``xb`` may carry more zone rows than ``zmember`` covers (e.g. padded to
+    a device-count multiple): trailing rows are ignored."""
+    Z, M = zmember.shape
+    xb = xb[:Z]
+    tgt = jnp.where(zmask > 0, zmember, num_nodes).reshape(-1)
+    flat = xb.reshape((Z * M,) + xb.shape[2:])
+    out = jnp.zeros((num_nodes,) + xb.shape[2:], xb.dtype)
+    return out.at[tgt].set(flat, mode="drop")
+
+
 def paint_rigid(cfg: LaminarConfig, rng: np.random.Generator):
     """Pre-occupy node bitmaps with rigid-topology chunks (post-landing ecology)."""
     A = cfg.atoms_per_node

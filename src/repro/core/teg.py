@@ -20,23 +20,39 @@ from repro.core.state import ROUTING, SimState
 from repro.core.utility import unified_utility, zone_routing_logits
 
 
-def refresh(cfg: LaminarConfig, s: SimState) -> SimState:
+def refresh(cfg: LaminarConfig, s: SimState, plane=None) -> SimState:
     """Refresh T_global (zone aggregates) from the Z-HAF reported view.
 
     The segmented reduction is one of the paper's three measured hot-path
     ops (29.3 ns zone aggregation): the reported view is densified into
     (Z, M) member tiles and reduced by ``hotpath.zone_aggregate`` (Pallas
     kernel when ``cfg.use_pallas``, jnp reference otherwise).
+
+    ``plane`` (a node-plane strategy, see ``repro.parallel.engine_mesh``)
+    overrides where the reduction runs: the zone-sharded engine reduces its
+    local zone-block rows and ``all_gather``s only the (Z,) aggregate table
+    — the paper's O(Z) per-tick control-plane exchange. ``plane=None`` is
+    the single-device path, bit-for-bit today's behavior.
     """
     every = cfg.ticks(cfg.teg_refresh_ms)
     due = (s.t % every) == 0
 
-    s_gather, h_gather, mask = zhaf.zone_gather(cfg, s)
-    zS, zH = hotpath.zone_aggregate(cfg, s_gather, h_gather, mask)
-    return s._replace(
-        zS=jnp.where(due, zS, s.zS),
-        zH=jnp.where(due, zH, s.zH),
-    )
+    if plane is None:
+        s_gather, h_gather, mask = zhaf.zone_gather(cfg, s)
+        zS, zH = hotpath.zone_aggregate(cfg, s_gather, h_gather, mask)
+        zS = jnp.where(due, zS, s.zS)
+        zH = jnp.where(due, zH, s.zH)
+    else:
+        # gate the cross-shard exchange on the refresh tick: ``due`` is
+        # replicated, so every device takes the same branch and the
+        # all_gather only fires when the aggregate table actually updates
+        # (this is what makes the O(Z)-per-refresh traffic model real)
+        zS, zH = jax.lax.cond(
+            due,
+            lambda: plane.zone_aggregates(cfg, s),
+            lambda: (s.zS, s.zH),
+        )
+    return s._replace(zS=zS, zH=zH)
 
 
 def dispatch(

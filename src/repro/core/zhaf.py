@@ -6,6 +6,15 @@ Maintains the per-node reported (stale) state view with:
         S_pred = max(0, S + tau_i * S_dot);
   * the short-project / long-degrade missing-data rule (silent nodes become
     conservatively unattractive rather than falsely optimistic).
+
+Sharding contract: under the zone-sharded engine every array this module
+reads or writes (reported state, derivatives, report timers, the per-tick
+PRNG draws) is REPLICATED across devices — only the bit-plane inputs of
+``build_view`` are computed per zone block, via the node-plane strategy in
+``repro.parallel.engine_mesh``. Everything here must therefore stay
+elementwise-deterministic over the node axis (no cross-node float
+reductions), or the replicas would diverge and break the bit-for-bit
+parity contract of ``tests/test_shard_engine.py``.
 """
 
 from __future__ import annotations

@@ -30,3 +30,27 @@ def bitmap_fit(
     if interpret is None:
         interpret = _on_cpu()
     return bitmap_fit_pallas(words, mass, contig, interpret=interpret)
+
+
+def bitmap_fit_blocked(
+    words: jax.Array,  # (Z, M, W) zone-blocked bitmap words (padding zeroed)
+    mass: jax.Array,  # (Z, M) demand per slot
+    contig: jax.Array,  # (Z, M) task class per slot
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Zone-blocked entry point: the SAME kernel, gridded over zone-block
+    rows. The kernel tiles plain row batches, so the padded ``(Z, M)``
+    layout (``state.pack_zoned``) is just a reshape — per-row results are
+    bit-identical to the flat layout's rows, which is what lets the
+    zone-sharded engine (`repro.parallel.engine_mesh`) and the flat engine
+    share one kernel. Returns (Z, M) int32 feasibility; padding rows carry
+    whatever the all-zero bitmap implies and must be masked by the caller.
+    """
+    Z, M, W = words.shape
+    flat = bitmap_fit(
+        words.reshape(Z * M, W),
+        mass.reshape(Z * M),
+        contig.reshape(Z * M),
+        interpret=interpret,
+    )
+    return flat.reshape(Z, M)

@@ -32,6 +32,11 @@ def survival_scan(
     """Per-tick survival decision: (pressure, victim, resume, react, expire).
 
     ``interpret=None`` auto-selects interpret mode on CPU backends.
+
+    Probe-plane op: under the zone-sharded engine the probe table (and the
+    small (N,) node accumulators this op scatters into) are replicated, so
+    every device runs the identical scan — the scatter order, and therefore
+    the float pressure accumulation, is exactly the flat engine's.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

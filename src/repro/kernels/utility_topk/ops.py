@@ -14,6 +14,10 @@ def utility_topk(s_pred, h_pred, eps, feasible, gamma, interpret: bool | None = 
     """Best candidate per probe under the unified utility field.
 
     ``interpret=None`` auto-selects interpret mode on CPU backends.
+
+    Probe-plane op: under the zone-sharded engine the probe table is
+    replicated, so every device runs this kernel identically on the full
+    (P, K) candidate matrix — no zone-blocked variant exists or is needed.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

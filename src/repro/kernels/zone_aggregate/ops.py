@@ -14,6 +14,12 @@ def zone_aggregate(s_gather, h_gather, mask, interpret: bool | None = None):
     """Per-zone (mean slack, total heat) from densified node gathers.
 
     ``interpret=None`` auto-selects interpret mode on CPU backends.
+
+    The inputs are already the zone-blocked ``(Z, M)`` layout, and the
+    kernel grids over zone rows — so this op serves the flat engine (all Z
+    rows at once) and each shard of the zone-sharded engine (its local
+    ``ceil(Z / D)`` rows) with the exact same kernel: row reductions are
+    independent, so blocking cannot change a real zone's aggregate.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

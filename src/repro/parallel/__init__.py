@@ -1,4 +1,10 @@
-"""Parallelism: sharding rules + collective helpers."""
+"""Parallelism: sharding rules, collective helpers, zone-sharded engine.
+
+``engine_mesh`` (the zone-sharded scale-out engine) is imported lazily by
+its users rather than here: it pulls in ``repro.core.engine``, and eager
+import would make ``repro.parallel`` unimportable from lightweight
+model/launch contexts that only need the sharding rules.
+"""
 
 from repro.parallel import sharding
 

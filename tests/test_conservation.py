@@ -1,0 +1,194 @@
+"""Cross-metric conservation identities the summarize() counters must obey.
+
+Nothing pinned these before: a counter could silently double-count (or drop)
+a task and every per-metric golden would still pass. Two nets:
+
+  1. task conservation — every task that STARTED execution is accounted for
+     exactly once at the horizon:
+
+         started == completed + oom_kill_f + oom_kill_l + reclaimed
+                    + evicted_killed + resident_end
+
+     where ``evicted_killed`` is ``evicted`` in kernel-OOM mode (hard node
+     failure destroys residents outright) and 0 under Airlock (an evicted
+     resident survives as a migrating glass-state incarnation, so it is
+     either still resident at the horizon or was reclaimed — both already
+     on the right-hand side). Checked for EVERY scenario preset.
+
+  2. down-node exclusion — a node that advertises zero capacity never
+     holds a *new* allocation: under hard failure no probe ever holds atoms
+     on a down node at any tick boundary; under graceful drain a down
+     node's held-atom count never increases while it is down.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DisruptionConfig,
+    LaminarConfig,
+    LaminarEngine,
+    MemoryConfig,
+    SCENARIOS,
+    ScenarioConfig,
+)
+from repro.core.engine import make_step
+from repro.core.state import EMPTY
+
+CFG = LaminarConfig(
+    num_nodes=64,
+    zone_size=32,
+    probe_capacity=1024,
+    max_arrivals_per_tick=64,
+    horizon_ms=150.0,
+    rho=0.8,
+    memory=MemoryConfig(enabled=True),
+    airlock=True,
+)
+
+
+def check_conservation(out: dict, airlock: bool):
+    evicted_killed = 0 if airlock else out["evicted"]
+    accounted = (
+        out["completed"]
+        + out["oom_kill_f"]
+        + out["oom_kill_l"]
+        + out["reclaimed"]
+        + evicted_killed
+        + out["resident_end"]
+    )
+    assert out["started"] == accounted, (
+        f"started={out['started']} != completed={out['completed']} "
+        f"+ oom={out['oom_kill_f'] + out['oom_kill_l']} "
+        f"+ reclaimed={out['reclaimed']} + evicted_killed={evicted_killed} "
+        f"+ resident_end={out['resident_end']}"
+    )
+    # arrivals can only ever exceed starts (probes drop pre-start, never
+    # double-start), and the drop/in-flight split covers the difference
+    assert out["arrived"] >= out["started"]
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_conservation_airlock(name):
+    cfg = dataclasses.replace(CFG, scenario=SCENARIOS[name])
+    out = LaminarEngine(cfg).run(seed=0)
+    assert out["started"] > 0
+    check_conservation(out, airlock=True)
+
+
+@pytest.mark.parametrize("name", ["stationary", "churn", "storm"])
+def test_conservation_kernel_oom(name):
+    """Kernel-OOM mode: OOM kills and outright disruption evictions are the
+    terminal buckets (no glass-state survival)."""
+    cfg = dataclasses.replace(CFG, airlock=False, scenario=SCENARIOS[name])
+    out = LaminarEngine(cfg).run(seed=0)
+    assert out["started"] > 0
+    assert out["oom_kill_f"] + out["oom_kill_l"] > 0
+    if name in ("churn", "storm"):
+        assert out["evicted"] > 0
+    check_conservation(out, airlock=False)
+
+
+# ---------------------------------------------------------------------------
+# down-node exclusion, checked at every tick boundary
+# ---------------------------------------------------------------------------
+
+
+def _tick_states(cfg: LaminarConfig, num_ticks: int, seed: int = 0):
+    """Yield the post-tick SimState for ``num_ticks`` ticks (one jitted step)."""
+    eng = LaminarEngine(cfg)
+    s, lam = eng.init(seed)
+    step = jax.jit(make_step(cfg, lam, cfg.scenario))
+    for _ in range(num_ticks):
+        s, _ = step(s, None)
+        yield s
+
+
+def _held_per_node(s, num_nodes: int) -> np.ndarray:
+    """Atoms held at each node by live allocations (primary + migration)."""
+    held = np.zeros(num_nodes, np.int64)
+    for node_arr, alloc_arr in ((s.alloc_node, s.alloc), (s.node2, s.alloc2)):
+        nodes = np.asarray(node_arr)
+        words = np.asarray(alloc_arr)
+        live = nodes >= 0
+        bits = np.unpackbits(
+            words[live].view(np.uint8), axis=-1, bitorder="little"
+        ).sum(axis=-1)
+        np.add.at(held, nodes[live], bits.astype(np.int64))
+    return held
+
+
+@pytest.mark.slow
+def test_down_nodes_hold_no_allocations_under_hard_failure():
+    """Storm (hard failure): disruption clears residents' atoms, zeroed
+    capacity rejects every new admission — so NO probe may hold atoms on a
+    down node at any tick boundary.
+
+    Marked ``slow`` (240 un-scanned jitted ticks with host-side checks);
+    the CI ``shard2`` job runs this file without the marker filter."""
+    cfg = dataclasses.replace(CFG, scenario=SCENARIOS["storm"])
+    saw_down = 0
+    for t, s in enumerate(_tick_states(cfg, 240)):
+        up = np.asarray(s.node_up)
+        if up.all():
+            continue
+        saw_down += 1
+        held = _held_per_node(s, cfg.num_nodes)
+        bad = np.flatnonzero(~up & (held > 0))
+        assert bad.size == 0, f"tick {t}: down nodes {bad.tolist()} hold atoms"
+        # their advertised capacity is really zero (free bitmap words zeroed)
+        free_down = np.asarray(s.free)[~up]
+        assert not free_down.any(), f"tick {t}: down node advertises capacity"
+    assert saw_down > 0  # the process actually disrupted something
+
+
+@pytest.mark.slow
+def test_drained_nodes_accept_no_new_allocations():
+    """Graceful drain: residents keep their atoms, but the held-atom count
+    of a down node can only shrink (completions) while it is down.
+
+    Marked ``slow`` like the hard-failure twin; the CI ``shard2`` job runs
+    this file unfiltered."""
+    drain = ScenarioConfig(
+        name="drain",
+        disruption=DisruptionConfig(
+            enabled=True, fail_event_prob=0.02, drain=True
+        ),
+    )
+    cfg = dataclasses.replace(CFG, scenario=drain)
+    prev_held = None
+    prev_up = None
+    saw_drained_holding = 0
+    for t, s in enumerate(_tick_states(cfg, 240)):
+        up = np.asarray(s.node_up)
+        held = _held_per_node(s, cfg.num_nodes)
+        if prev_held is not None:
+            # nodes down across the whole boundary must not have gained atoms
+            down_both = ~up & ~prev_up
+            grew = np.flatnonzero(down_both & (held > prev_held))
+            assert grew.size == 0, f"tick {t}: drained nodes {grew.tolist()} grew"
+            saw_drained_holding += int((down_both & (held > 0)).sum())
+        prev_held, prev_up = held, up
+    # the drain semantics were actually exercised: residents survived on
+    # drained nodes (otherwise this test degenerates to the hard-fail one)
+    assert saw_drained_holding > 0
+
+
+def test_summarize_resident_end_matches_final_state():
+    """resident_end is derived from the final table, not a counter — pin the
+    derivation against a directly computed reference."""
+    from repro.core.state import RUNNING, SUSPENDED
+
+    cfg = dataclasses.replace(CFG, scenario=SCENARIOS["storm"])
+    eng = LaminarEngine(cfg)
+    s, lam = eng.init(0)
+    final, ts = eng._runner(lam, cfg.num_ticks)(s)
+    out = eng.run(seed=0)
+    st = np.asarray(final.st)
+    mig = np.asarray(final.migrating)
+    want = int(((st == RUNNING) | (st == SUSPENDED) | (mig & (st != EMPTY))).sum())
+    assert out["resident_end"] == want

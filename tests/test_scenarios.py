@@ -18,8 +18,9 @@ Three layers:
      seed): rate-schedule or disruption drift fails loudly here instead of
      silently shifting the exp6 benches. Goldens are exact integer metric
      values, deterministic per platform + jax version; if a DELIBERATE
-     engine/scenario change moves them, re-pin via
-     ``python tests/test_scenarios.py`` (prints the current dict).
+     engine/scenario change moves them, re-pin in place via
+     ``python scripts/regen_goldens.py`` (``python tests/test_scenarios.py``
+     delegates there; ``--check`` dry-runs the drift report).
 """
 
 import dataclasses
@@ -360,7 +361,7 @@ GOLD_FIELDS = (
     "evicted",
 )
 
-# exact integer metrics at seed 0 — regenerate with `python tests/test_scenarios.py`
+# exact integer metrics at seed 0 — regenerate with `python scripts/regen_goldens.py`
 GOLDEN = {
     'bursty': {'arrived': 3663, 'started': 3609, 'completed': 3198, 'fastfail': 0, 'timeout': 0, 'suspended_cnt': 3228, 'resumed_insitu': 3047, 'reactivated': 11, 'migrated': 7, 'reclaimed': 0, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
     'churn': {'arrived': 4900, 'started': 4017, 'completed': 3473, 'fastfail': 413, 'timeout': 0, 'suspended_cnt': 5274, 'resumed_insitu': 4895, 'reactivated': 87, 'migrated': 227, 'reclaimed': 7, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 206},
@@ -383,7 +384,7 @@ def test_scenario_golden_metrics(name):
     assert got == GOLDEN[name], (
         f"scenario {name!r} drifted from its golden twin.\n"
         f"  got:    {got}\n  pinned: {GOLDEN[name]}\n"
-        "If this change is deliberate, re-pin: python tests/test_scenarios.py"
+        "If this change is deliberate, re-pin: python scripts/regen_goldens.py"
     )
 
 
@@ -413,7 +414,7 @@ BASE_GOLD_CFG = LaminarConfig(
 )
 BASE_GOLD_FIELDS = ("arrived", "started", "completed", "failed", "timeout", "dropped")
 
-# exact integer metrics at seed 0 — regenerate with `python tests/test_scenarios.py`
+# exact integer metrics at seed 0 — regenerate with `python scripts/regen_goldens.py`
 BASELINE_GOLDEN = {
     'slurm': {'arrived': 5475, 'started': 5475, 'completed': 5054, 'failed': 131, 'timeout': 0, 'dropped': 0},
     'ray': {'arrived': 5379, 'started': 5378, 'completed': 4984, 'failed': 51, 'timeout': 0, 'dropped': 0},
@@ -437,7 +438,7 @@ def test_baseline_scenario_golden_metrics(name):
     assert got == BASELINE_GOLDEN[name], (
         f"baseline {name!r} drifted under SCENARIOS['storm'].\n"
         f"  got:    {got}\n  pinned: {BASELINE_GOLDEN[name]}\n"
-        "If this change is deliberate, re-pin: python tests/test_scenarios.py"
+        "If this change is deliberate, re-pin: python scripts/regen_goldens.py"
     )
     assert got["failed"] > 0  # node failures actually killed residents
 
@@ -450,12 +451,12 @@ def _pin():
 
 
 if __name__ == "__main__":
-    _pin()
-    print("GOLDEN = {")
-    for name, g in GOLDEN.items():
-        print(f"    {name!r}: {g},")
-    print("}")
-    print("BASELINE_GOLDEN = {")
-    for name, g in BASELINE_GOLDEN.items():
-        print(f"    {name!r}: {g},")
-    print("}")
+    # delegate to the unified golden-regeneration entry point (it rewrites
+    # the pinned blocks in this file AND the shard/scale goldens in place)
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+    import regen_goldens
+
+    sys.exit(regen_goldens.main())
