@@ -7,7 +7,6 @@ sequences exist; pressure converts into bounded suspension/dissipation.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np

@@ -8,7 +8,6 @@ scale-dependence of each claim is discussed per-benchmark in EXPERIMENTS.md.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 from pathlib import Path

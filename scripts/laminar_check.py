@@ -1,0 +1,177 @@
+"""laminar-check: the repo's three-plane static analyzer, one entry point.
+
+Planes (rule catalog: ``docs/ANALYSIS.md`` / ``repro.analysis.findings``):
+
+  * ``trace``  — jaxpr audit of the engine hot path: jnp-vs-Pallas branch
+    aval parity, scenario/config cache-key completeness (every field that
+    changes the traced program must change ``signature()``), dtype hazards
+    (weak-type carries, f64 leaks, f32 narrowing). Nothing executes; the
+    plane runs entirely on ``jax.make_jaxpr`` / ``jax.eval_shape``.
+  * ``kernel`` — Pallas kernel contracts for all four kernel packages:
+    grid x BlockSpec coverage of padded operands, index-map bounds at tail
+    blocks, VMEM footprint vs budget, kernel-vs-reference output avals.
+  * ``lint``   — repo-specific AST rules: Python branching on traced
+    values, ``np.`` in traced code, kernel ops without a ``_ref`` oracle or
+    parity test, config mutation.
+
+Usage:
+
+    PYTHONPATH=src python scripts/laminar_check.py                # full tree
+    python scripts/laminar_check.py --plane lint --plane kernel   # subset
+    python scripts/laminar_check.py --json findings.json          # CI artifact
+    python scripts/laminar_check.py tests/fixtures/analysis/bad_traced_if.py
+
+Exit status: 0 when no findings survive suppression filtering, 1 otherwise
+(2 on usage errors). Inline suppressions use
+``# laminar-check: ignore[LC101]`` on the flagged line or the line above.
+
+File mode (positional paths) runs the AST lint over exactly those files and
+additionally imports each one: a fixture that defines
+``LAMINAR_CHECK_TARGETS`` (an iterable of zero-arg callables returning
+finding lists) gets those callables executed — this is how the dynamic
+fixtures exercise the trace/kernel planes on known-bad code.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+TESTS = ROOT / "tests"
+sys.path.insert(0, str(SRC))
+
+from repro.analysis.findings import RULES, Finding, filter_suppressed  # noqa: E402
+
+PLANES = ("lint", "kernel", "trace")
+
+
+def _progress(verbose: bool):
+    if not verbose:
+        return None
+    t0 = time.time()
+
+    def log(msg: str) -> None:
+        print(f"  [{time.time() - t0:6.1f}s] {msg}", file=sys.stderr)
+
+    return log
+
+
+def run_tree(planes: List[str], verbose: bool) -> List[Finding]:
+    findings: List[Finding] = []
+    log = _progress(verbose)
+    if "lint" in planes:
+        from repro.analysis.lint import run_lint
+
+        if log:
+            log("lint: src/")
+        findings.extend(run_lint(SRC, tests_root=TESTS, repo_root=ROOT))
+    if "kernel" in planes:
+        from repro.analysis.kernel_contract import run_kernel_contract
+
+        findings.extend(run_kernel_contract(progress=log))
+    if "trace" in planes:
+        from repro.analysis.trace_audit import run_trace_audit
+
+        findings.extend(run_trace_audit(progress=log))
+    return findings
+
+
+def run_files(paths: List[Path], verbose: bool) -> List[Finding]:
+    from repro.analysis.lint import lint_paths
+
+    log = _progress(verbose)
+    findings = lint_paths(paths, tests_root=None, repo_root=None)
+    for i, path in enumerate(paths):
+        spec = importlib.util.spec_from_file_location(
+            f"_laminar_check_target_{i}", path
+        )
+        if spec is None or spec.loader is None:
+            continue
+        mod = importlib.util.module_from_spec(spec)
+        try:
+            spec.loader.exec_module(mod)
+        except Exception as e:  # fixture import errors are findings, not crashes
+            findings.append(
+                Finding(
+                    rule="LC101",
+                    message=f"import of {path} failed: {type(e).__name__}: {e}",
+                    file=str(path),
+                )
+            )
+            continue
+        for target in getattr(mod, "LAMINAR_CHECK_TARGETS", []):
+            if log:
+                log(f"target: {path.name}:{getattr(target, '__name__', '?')}")
+            findings.extend(target())
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="laminar_check", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument(
+        "files",
+        nargs="*",
+        type=Path,
+        help="lint only these files (+ run their LAMINAR_CHECK_TARGETS); "
+        "default is the full three-plane tree audit",
+    )
+    ap.add_argument(
+        "--plane",
+        action="append",
+        choices=PLANES,
+        help="restrict the tree audit to a plane (repeatable; default all)",
+    )
+    ap.add_argument("--json", type=Path, help="write findings + catalog JSON")
+    ap.add_argument(
+        "--no-suppress",
+        action="store_true",
+        help="report findings even on lines with ignore directives",
+    )
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.files:
+        missing = [p for p in args.files if not p.is_file()]
+        if missing:
+            ap.error(f"no such file: {missing[0]}")
+        findings = run_files(args.files, args.verbose)
+    else:
+        planes = args.plane or list(PLANES)
+        findings = run_tree(planes, args.verbose)
+
+    if not args.no_suppress:
+        findings = filter_suppressed(findings)
+
+    if args.json:
+        payload = {
+            "findings": [f.to_json() for f in findings],
+            "rules": {
+                rid: {
+                    "plane": r.plane,
+                    "summary": r.summary,
+                    "rationale": r.rationale,
+                }
+                for rid, r in sorted(RULES.items())
+            },
+        }
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(payload, indent=2) + "\n")
+
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"laminar-check: {n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke, list_archs
 from repro.models import lm

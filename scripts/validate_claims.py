@@ -6,7 +6,6 @@ qualitatively.
 """
 
 import json
-import math
 from pathlib import Path
 
 BENCH = Path(__file__).resolve().parents[1] / "results" / "bench"

@@ -1,0 +1,24 @@
+"""laminar-check: static contract analysis for the Laminar reproduction.
+
+Three planes, one CLI (``scripts/laminar_check.py``), one CI gate:
+
+  * Plane 1 — :mod:`repro.analysis.trace_audit`: trace the engine tick to
+    jaxprs (never executing it) and verify jnp-vs-Pallas aval parity, that
+    every jaxpr-changing config field is captured by the compiled-runner
+    cache key, and that no dtype hazards hide in the scan body.
+  * Plane 2 — :mod:`repro.analysis.kernel_contract`: record each Pallas
+    kernel's ``pallas_call`` at trace time and statically check grid x
+    BlockSpec coverage, tail-block bounds, estimated VMEM footprint and
+    kernel-vs-reference output avals.
+  * Plane 3 — :mod:`repro.analysis.lint`: repo-specific AST rules over
+    ``src/`` (traced-value ``if``/``while``, ``np.`` in traced code, kernel
+    ops without a ``_ref`` twin or parity-test reference, config mutation).
+
+Every rule lives in :mod:`repro.analysis.findings` (``RULES``), findings are
+plain dataclasses serializable to JSON, and ``# laminar-check:
+ignore[RULE]`` suppresses a finding at its anchor line.
+"""
+
+from repro.analysis.findings import Finding, Rule, RULES, filter_suppressed
+
+__all__ = ["Finding", "Rule", "RULES", "filter_suppressed"]

@@ -1,0 +1,234 @@
+"""Finding/Rule model + the rule catalog shared by all three planes.
+
+A ``Finding`` is one violation of one registered ``Rule``; the CLI collects
+findings from every plane, drops the suppressed ones, serializes the rest
+to JSON for CI and exits non-zero when any survive. The catalog is the
+machine-readable half of ``docs/ANALYSIS.md`` — the doc's rule table is
+generated from the same registry, so the two cannot drift.
+
+Suppression: a finding anchored at ``file:line`` is suppressed when that
+line (or the line above it) carries ``# laminar-check: ignore[RULE]`` with
+a matching rule id. Suppressions are meant to be rare and must carry an
+inline reason next to the directive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "RULES",
+    "filter_suppressed",
+    "suppressed_rules_on_line",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered check: identity, plane, and what it guards against."""
+
+    id: str
+    plane: str  # "trace" | "kernel" | "lint"
+    summary: str
+    rationale: str  # which invariant / shipped bug this protects
+
+
+@dataclasses.dataclass
+class Finding:
+    """One concrete violation, anchored to a source location when known."""
+
+    rule: str
+    message: str
+    file: Optional[str] = None
+    line: Optional[int] = None
+
+    def location(self) -> str:
+        if self.file is None:
+            return "<project>"
+        return f"{self.file}:{self.line}" if self.line else self.file
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "plane": RULES[self.rule].plane if self.rule in RULES else "?",
+            "message": self.message,
+            "file": self.file,
+            "line": self.line,
+        }
+
+    def __str__(self) -> str:
+        return f"{self.location()}: {self.rule}: {self.message}"
+
+
+_RULE_LIST = [
+    # ---- plane 3: AST lint -------------------------------------------------
+    Rule(
+        id="LC101",
+        plane="lint",
+        summary="Python `if`/`while` on a traced value inside traced code",
+        rationale=(
+            "Python control flow on tracers either crashes at trace time or "
+            "silently specializes on one concrete value; scan/kernel bodies "
+            "must use jnp.where / lax.cond / pl.when instead."
+        ),
+    ),
+    Rule(
+        id="LC102",
+        plane="lint",
+        summary="`np.` usage inside a traced (jit/scan/kernel) context",
+        rationale=(
+            "numpy calls on tracers fail or silently constant-fold at trace "
+            "time, breaking the pure-jnp tick contract (engine docstring: "
+            "'no per-task Python control flow anywhere')."
+        ),
+    ),
+    Rule(
+        id="LC103",
+        plane="lint",
+        summary="kernel ops.py entry lacking a `_ref` twin or a parity-test reference",
+        rationale=(
+            "Every Pallas op must ship a pure-jnp oracle and be pinned by "
+            "the parity net; an untwinned op is exactly how the PR 2 "
+            "float-tie-break bug survived until it shipped."
+        ),
+    ),
+    Rule(
+        id="LC104",
+        plane="lint",
+        summary="config object mutated after construction",
+        rationale=(
+            "Configs are frozen static values closed over by jitted steps; "
+            "mutation (object.__setattr__ / attribute store) desynchronizes "
+            "the already-compiled scan from the config it claims to run."
+        ),
+    ),
+    # ---- plane 1: jaxpr trace audit ---------------------------------------
+    Rule(
+        id="LC201",
+        plane="trace",
+        summary="config field alters the traced jaxpr but not the cache-key signature",
+        rationale=(
+            "The compiled-runner cache must key on every jaxpr-changing "
+            "field; the PR 3 bug was exactly this (ScenarioConfig absent "
+            "from the runner cache key, colliding two scenarios that shared "
+            "a base rate)."
+        ),
+    ),
+    Rule(
+        id="LC202",
+        plane="trace",
+        summary="weak-typed float scan carry or float64 aval in the traced tick",
+        rationale=(
+            "A weak-typed carry re-promotes on contact with Python scalars "
+            "and can flip dtype between ticks; f64 avals mean host numpy "
+            "leaked into the traced path."
+        ),
+    ),
+    Rule(
+        id="LC203",
+        plane="trace",
+        summary="float32 value narrowed to a lower-precision float inside the scan body",
+        rationale=(
+            "Accumulators (pressure, patience, metrics) narrowed to "
+            "bf16/f16 inside the scan body silently lose the bit-for-bit "
+            "jnp-vs-Pallas parity the test net enforces."
+        ),
+    ),
+    Rule(
+        id="LC204",
+        plane="trace",
+        summary="jnp and Pallas branches of a hot-path op disagree on output avals",
+        rationale=(
+            "cfg.use_pallas is a static branch: both sides must produce "
+            "identical shapes/dtypes or downstream engine code specializes "
+            "differently per mode and bit-parity is unachievable."
+        ),
+    ),
+    # ---- plane 2: Pallas kernel contracts ---------------------------------
+    Rule(
+        id="LC301",
+        plane="kernel",
+        summary="grid x BlockSpec does not cover the padded operand",
+        rationale=(
+            "A mis-retuned block shape or grid that skips the tail block "
+            "leaves rows unwritten (garbage outputs) or unread (silently "
+            "ignored probes/nodes); coverage must be exact."
+        ),
+    ),
+    Rule(
+        id="LC302",
+        plane="kernel",
+        summary="BlockSpec index map reaches out of bounds at the tail block",
+        rationale=(
+            "Blocks must tile the pre-padded arrays exactly; an index map "
+            "whose last block hangs past the operand relies on implicit "
+            "masking that differs across backends."
+        ),
+    ),
+    Rule(
+        id="LC303",
+        plane="kernel",
+        summary="estimated per-step VMEM footprint exceeds the backend budget",
+        rationale=(
+            "Block shapes are tuned (ROADMAP item 3); the resident blocks "
+            "of one grid step must fit VMEM (~16 MB/core on TPU) or the "
+            "kernel fails to lower on real hardware."
+        ),
+    ),
+    Rule(
+        id="LC304",
+        plane="kernel",
+        summary="kernel and reference output avals differ",
+        rationale=(
+            "ops.py routes to the kernel or its `_ref` oracle; if their "
+            "output shapes/dtypes diverge the parity tests compare "
+            "different quantities and the dispatch contract is broken."
+        ),
+    ),
+]
+
+RULES: Dict[str, Rule] = {r.id: r for r in _RULE_LIST}
+
+_IGNORE_RE = re.compile(r"#\s*laminar-check:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+
+def suppressed_rules_on_line(text: str) -> List[str]:
+    """Rule ids named by a ``# laminar-check: ignore[...]`` directive."""
+    m = _IGNORE_RE.search(text)
+    if not m:
+        return []
+    return [tok.strip() for tok in m.group(1).split(",") if tok.strip()]
+
+
+def _is_suppressed(f: Finding, source_lines: List[str]) -> bool:
+    if f.line is None or not 1 <= f.line <= len(source_lines):
+        return False
+    here = suppressed_rules_on_line(source_lines[f.line - 1])
+    # the line-above form only counts on a comment-only line, so a trailing
+    # directive on one statement cannot spill onto the next
+    above: List[str] = []
+    if f.line >= 2 and source_lines[f.line - 2].lstrip().startswith("#"):
+        above = suppressed_rules_on_line(source_lines[f.line - 2])
+    return f.rule in here or f.rule in above
+
+
+def filter_suppressed(findings: Iterable[Finding]) -> List[Finding]:
+    """Drop findings whose anchor line carries a matching ignore directive."""
+    out: List[Finding] = []
+    cache: Dict[str, List[str]] = {}
+    for f in findings:
+        if f.file is not None:
+            if f.file not in cache:
+                try:
+                    cache[f.file] = Path(f.file).read_text().splitlines()
+                except OSError:
+                    cache[f.file] = []
+            if _is_suppressed(f, cache[f.file]):
+                continue
+        out.append(f)
+    return out

@@ -1,0 +1,435 @@
+"""Plane 2: static Pallas kernel contract checks.
+
+The four kernel packages (``bitmap_fit``, ``utility_topk``,
+``zone_aggregate``, ``survival_scan``) all follow the same shape discipline:
+pre-pad the operand to a multiple of the block size, tile it with a
+``grid`` x ``BlockSpec`` decomposition, slice the padding back off. ROADMAP
+item 3 (block-shape retuning) churns exactly those numbers, so this plane
+re-derives the contract from the *actual* ``pallas_call`` each op makes —
+recorded at trace time via ``jax.eval_shape`` (nothing executes) — and
+checks, per operand:
+
+  * LC301 — every block of the padded operand is visited by some grid point
+    (an output block nobody writes is garbage; an input block nobody reads
+    is silently dropped work);
+  * LC302 — the index map stays in bounds at every grid point, tail block
+    included (the repo contract is exact tiling of the pre-padded array, no
+    implicit masking);
+  * LC303 — the VMEM-resident footprint of one grid step (all blocked
+    operands + full ``memory_space=ANY`` operands) fits the per-backend
+    budget;
+  * LC304 — the kernel route and the pure-jnp ``_ref`` oracle produce
+    identical output avals on the same inputs.
+
+Everything here is re-usable by fixtures: ``audit_pallas_fn`` runs the
+recorder + checks over any callable that issues ``pallas_call``s.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import itertools
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "PallasCallRecord",
+    "VMEM_BUDGETS",
+    "audit_pallas_fn",
+    "check_record",
+    "compare_output_avals",
+    "record_pallas_calls",
+    "run_kernel_contract",
+]
+
+# Budgets for the VMEM-resident working set of ONE grid step. TPU VMEM is
+# ~16 MiB/core; leave headroom for spills and double buffering.
+VMEM_BUDGETS: Dict[str, int] = {
+    "tpu": 16 * 2**20,
+    "gpu": 8 * 2**20,  # stand-in: shared-memory-friendly ceiling per block
+}
+DEFAULT_BACKEND = "tpu"
+
+# Representative geometries: the paper-scale production shape and a ragged
+# shape that exercises the padding path (nothing divides the block sizes).
+PROD_GEOM = dict(N=2048, W=2, A=64, P=8192, K=8, Z=8, M=256)
+RAGGED_GEOM = dict(N=1500, W=2, A=64, P=1000, K=5, Z=5, M=33)
+
+_KERNEL_FILES = {
+    "bitmap_fit": "src/repro/kernels/bitmap_fit/kernel.py",
+    "bitmap_fit_blocked": "src/repro/kernels/bitmap_fit/kernel.py",
+    "utility_topk": "src/repro/kernels/utility_topk/kernel.py",
+    "zone_aggregate": "src/repro/kernels/zone_aggregate/kernel.py",
+    "survival_scan": "src/repro/kernels/survival_scan/kernel.py",
+}
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    """One ``pallas_call`` as issued: specs + the operand avals it received."""
+
+    name: str
+    grid: Tuple[int, ...]
+    in_specs: List[Any]  # pl.BlockSpec
+    out_specs: List[Any]
+    out_avals: List[Tuple[Tuple[int, ...], Any]]  # (shape, dtype)
+    in_avals: List[Tuple[Tuple[int, ...], Any]]
+
+
+def _kernel_fn_name(kernel: Any) -> str:
+    while isinstance(kernel, functools.partial):
+        kernel = kernel.func
+    return getattr(kernel, "__name__", repr(kernel))
+
+
+def _as_list(x: Any) -> List[Any]:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+@contextlib.contextmanager
+def record_pallas_calls() -> Iterator[List[PallasCallRecord]]:
+    """Monkeypatch ``pallas_call`` to record grid/specs/avals at trace time.
+
+    The kernel modules hold a reference to the ``jax.experimental.pallas``
+    *module*, so patching the attribute intercepts their calls; the spy
+    records and then delegates to the real ``pallas_call``, so semantics
+    (and abstract evaluation under ``jax.eval_shape``) are unchanged.
+    """
+    import jax.experimental.pallas as pl_mod
+
+    records: List[PallasCallRecord] = []
+    real = pl_mod.pallas_call
+
+    def spy(kernel, *pargs, **kwargs):
+        inner = real(kernel, *pargs, **kwargs)
+
+        def wrapped(*operands):
+            grid = kwargs.get("grid", ())
+            if isinstance(grid, int):
+                grid = (grid,)
+            records.append(
+                PallasCallRecord(
+                    name=_kernel_fn_name(kernel),
+                    grid=tuple(int(g) for g in grid),
+                    in_specs=_as_list(kwargs.get("in_specs")),
+                    out_specs=_as_list(kwargs.get("out_specs")),
+                    out_avals=[
+                        (tuple(o.shape), o.dtype)
+                        for o in _as_list(kwargs.get("out_shape"))
+                    ],
+                    in_avals=[
+                        (tuple(x.shape), jnp.result_type(x)) for x in operands
+                    ],
+                )
+            )
+            return inner(*operands)
+
+        return wrapped
+
+    pl_mod.pallas_call = spy
+    try:
+        yield records
+    finally:
+        pl_mod.pallas_call = real
+
+
+# ---------------------------------------------------------------------------
+# per-record checks (LC301 / LC302 / LC303)
+# ---------------------------------------------------------------------------
+
+
+def _check_operand(
+    spec: Any,
+    shape: Tuple[int, ...],
+    dtype: Any,
+    grid_points: Sequence[Tuple[int, ...]],
+    label: str,
+    context: str,
+    file: Optional[str],
+) -> Tuple[List[Finding], int]:
+    """Coverage + bounds for one operand; returns (findings, vmem_bytes)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        # memory_space-only spec: whole operand resident, trivially covered
+        return [], int(np.prod(shape or (1,))) * itemsize
+
+    block = tuple(int(b) for b in block)
+    findings: List[Finding] = []
+    if len(block) != len(shape):
+        findings.append(
+            Finding(
+                rule="LC301",
+                message=(
+                    f"{context}: {label} block_shape {block} has rank "
+                    f"{len(block)} but the operand is {shape}"
+                ),
+                file=file,
+            )
+        )
+        return findings, int(np.prod(block)) * itemsize
+
+    nblocks = tuple(-(-s // b) for s, b in zip(shape, block))
+    covered = np.zeros(nblocks, dtype=bool)
+    oob_reported = False
+    for pt in grid_points:
+        idx = spec.index_map(*pt)
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        idx = tuple(int(i) for i in idx)
+        in_bounds = True
+        for i, b, s in zip(idx, block, shape):
+            if i < 0 or (i + 1) * b > s:
+                in_bounds = False
+                if not oob_reported:
+                    findings.append(
+                        Finding(
+                            rule="LC302",
+                            message=(
+                                f"{context}: {label} index map puts block "
+                                f"{idx} (block_shape {block}) outside the "
+                                f"operand {shape} at grid point {pt} — the "
+                                "contract is exact tiling of the pre-padded "
+                                "array"
+                            ),
+                            file=file,
+                        )
+                    )
+                    oob_reported = True
+        if in_bounds:
+            covered[idx] = True
+    if not covered.all():
+        missing = int(covered.size - covered.sum())
+        first = tuple(
+            int(v) for v in np.argwhere(~covered)[0]
+        )
+        findings.append(
+            Finding(
+                rule="LC301",
+                message=(
+                    f"{context}: grid {len(grid_points)} points leave "
+                    f"{missing}/{covered.size} block(s) of {label} "
+                    f"(shape {shape}, block {block}) unvisited — first "
+                    f"uncovered block index {first}"
+                ),
+                file=file,
+            )
+        )
+    return findings, int(np.prod(block)) * itemsize
+
+
+def check_record(
+    rec: PallasCallRecord,
+    budget_bytes: Optional[int] = None,
+    context: str = "",
+) -> List[Finding]:
+    """LC301/LC302/LC303 over one recorded ``pallas_call``."""
+    budget = (
+        VMEM_BUDGETS[DEFAULT_BACKEND] if budget_bytes is None else budget_bytes
+    )
+    context = context or rec.name
+    file = _KERNEL_FILES.get(context.split("[")[0])
+    findings: List[Finding] = []
+    grid_points = list(itertools.product(*(range(g) for g in rec.grid)))
+    if not grid_points:
+        findings.append(
+            Finding(
+                rule="LC301",
+                message=f"{context}: empty grid {rec.grid} — kernel never runs",
+                file=file,
+            )
+        )
+        return findings
+
+    operands = [
+        (spec, shape, dtype, f"in[{i}]")
+        for i, (spec, (shape, dtype)) in enumerate(
+            zip(rec.in_specs, rec.in_avals)
+        )
+    ] + [
+        (spec, shape, dtype, f"out[{i}]")
+        for i, (spec, (shape, dtype)) in enumerate(
+            zip(rec.out_specs, rec.out_avals)
+        )
+    ]
+    vmem = 0
+    for spec, shape, dtype, label in operands:
+        fs, nbytes = _check_operand(
+            spec, shape, dtype, grid_points, label, context, file
+        )
+        findings.extend(fs)
+        vmem += nbytes
+    if vmem > budget:
+        findings.append(
+            Finding(
+                rule="LC303",
+                message=(
+                    f"{context}: estimated VMEM-resident footprint per grid "
+                    f"step is {vmem / 2**20:.2f} MiB, over the "
+                    f"{budget / 2**20:.0f} MiB {DEFAULT_BACKEND} budget"
+                ),
+                file=file,
+            )
+        )
+    return findings
+
+
+def audit_pallas_fn(
+    fn: Callable,
+    *args: Any,
+    name: str = "<pallas fn>",
+    budget_bytes: Optional[int] = None,
+) -> List[Finding]:
+    """Trace ``fn(*args)`` abstractly, check every ``pallas_call`` it makes.
+
+    ``args`` may be ``jax.ShapeDtypeStruct``s — nothing is executed. Raises
+    if the function makes no ``pallas_call`` at all (that is a checker
+    wiring bug, not a code finding).
+    """
+    jax.clear_caches()  # a prior jit trace of the same shapes would skip us
+    with record_pallas_calls() as records:
+        jax.eval_shape(fn, *args)
+    if not records:
+        raise RuntimeError(f"{name}: no pallas_call reached the recorder")
+    out: List[Finding] = []
+    for rec in records:
+        out.extend(check_record(rec, budget_bytes, context=name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LC304: kernel vs reference output avals
+# ---------------------------------------------------------------------------
+
+
+def _aval_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda a: (tuple(a.shape), str(jnp.dtype(a.dtype))), tree)
+
+
+def compare_output_avals(
+    name: str, kernel_out: Any, ref_out: Any, file: Optional[str] = None
+) -> List[Finding]:
+    ak, ar = _aval_tree(kernel_out), _aval_tree(ref_out)
+    if ak == ar:
+        return []
+    return [
+        Finding(
+            rule="LC304",
+            message=(
+                f"{name}: kernel output avals {ak} != reference output "
+                f"avals {ar}"
+            ),
+            file=file or _KERNEL_FILES.get(name.split("[")[0]),
+        )
+    ]
+
+
+# ---------------------------------------------------------------------------
+# the shipped kernel suite
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape: Tuple[int, ...], dtype: Any) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def kernel_suite(geom: Dict[str, int]):
+    """(name, kernel_fn, ref_fn, args) for every shipped kernel entry."""
+    from repro.kernels.bitmap_fit import ops as bops
+    from repro.kernels.survival_scan import ops as sops
+    from repro.kernels.utility_topk import ops as uops
+    from repro.kernels.zone_aggregate import ops as zops
+
+    N, W, P, K, Z, M = (geom[k] for k in ("N", "W", "P", "K", "Z", "M"))
+    f32, i32, u32, b8 = jnp.float32, jnp.int32, jnp.uint32, jnp.bool_
+
+    surv_kw = dict(
+        airlock=True,
+        residual=0.3,
+        watermark=0.9,
+        safe=0.8,
+        t_susp=80,
+        t_surv=240,
+    )
+    return [
+        (
+            "bitmap_fit",
+            functools.partial(bops.bitmap_fit, interpret=True),
+            bops.bitmap_fit_ref,
+            (_sds((N, W), u32), _sds((N,), i32), _sds((N,), b8)),
+        ),
+        (
+            "bitmap_fit_blocked",
+            functools.partial(bops.bitmap_fit_blocked, interpret=True),
+            bops.bitmap_fit_blocked_ref,
+            (_sds((Z, M, W), u32), _sds((Z, M), i32), _sds((Z, M), b8)),
+        ),
+        (
+            "utility_topk",
+            functools.partial(uops.utility_topk, interpret=True),
+            uops.utility_topk_ref,
+            (
+                _sds((P, K), f32),
+                _sds((P, K), f32),
+                _sds((P, K), f32),
+                _sds((P, K), b8),
+                _sds((), f32),
+            ),
+        ),
+        (
+            "zone_aggregate",
+            functools.partial(zops.zone_aggregate, interpret=True),
+            zops.zone_aggregate_ref,
+            (_sds((Z, M), f32), _sds((Z, M), f32), _sds((Z, M), b8)),
+        ),
+        (
+            "survival_scan",
+            functools.partial(sops.survival_scan, interpret=True, **surv_kw),
+            functools.partial(sops.survival_scan_ref, **surv_kw),
+            (
+                _sds((P,), i32),
+                _sds((P,), i32),
+                _sds((P,), f32),
+                _sds((P,), f32),
+                _sds((P,), b8),
+                _sds((P,), i32),
+                _sds((P,), i32),
+                _sds((N,), f32),
+                _sds((), i32),
+            ),
+        ),
+    ]
+
+
+def run_kernel_contract(
+    budget_bytes: Optional[int] = None,
+    progress: Optional[Callable[[str], None]] = None,
+) -> List[Finding]:
+    """All four kernel packages x {production, ragged} geometries."""
+    log = progress or (lambda m: None)
+    findings: List[Finding] = []
+    for geom_name, geom in (("prod", PROD_GEOM), ("ragged", RAGGED_GEOM)):
+        for name, kfn, rfn, args in kernel_suite(geom):
+            ctx = f"{name}[{geom_name}]"
+            log(f"kernel: {ctx}")
+            jax.clear_caches()  # force a fresh trace through the recorder
+            with record_pallas_calls() as records:
+                kernel_out = jax.eval_shape(kfn, *args)
+            if not records:
+                raise RuntimeError(f"{ctx}: no pallas_call recorded")
+            for rec in records:
+                findings.extend(check_record(rec, budget_bytes, context=ctx))
+            ref_out = jax.eval_shape(rfn, *args)
+            findings.extend(compare_output_avals(ctx, kernel_out, ref_out))
+    return findings

@@ -1,0 +1,732 @@
+"""Plane 3: repo-specific AST lint over ``src/``.
+
+Rules (catalog in :mod:`repro.analysis.findings`):
+
+  * LC101 — Python ``if``/``while`` on a *traced* value inside traced code;
+  * LC102 — ``np.`` usage inside traced code;
+  * LC103 — kernel ``ops.py`` entries lacking a ``_ref`` twin or a
+    parity-test reference;
+  * LC104 — config objects mutated after construction.
+
+"Traced code" is computed, not guessed: the linter builds a project-wide
+index of function definitions, seeds the traced set from syntactic evidence
+(functions handed to ``jax.jit`` / ``lax.scan`` / ``lax.cond`` /
+``shard_map`` / ``pl.pallas_call``, ``@jax.jit``-decorated functions, and
+Pallas kernel bodies recognized by their ``*_ref`` parameters), then
+propagates through the intra-project call graph. Name resolution is
+lexically scoped — a nested closure handed to ``jax.jit`` does not drag a
+same-named method into the traced set — and ``from repro.core import
+airlock; airlock.report(...)`` resolves across modules. Host-side code
+(``summarize``, ``init_state``, benchmark drivers) is therefore never
+linted with the traced rules even when it lives next to traced code.
+
+Taintedness for LC101 is a per-function forward pass: parameters annotated
+as arrays (``jax.Array``), fields of state structs (``SimState`` and
+friends), ``*_ref`` kernel references, and the results of ``jnp.*`` /
+``jax.lax.*`` / ``jax.random.*`` calls are traced values; ``.shape`` /
+``.dtype`` / ``.ndim`` access, ``len()``, and identity tests against
+``None`` are static and clear the taint. The pass under-approximates on
+purpose — a lint false negative is cheap, a false positive on the clean
+tree is not.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+__all__ = ["run_lint", "ProjectIndex", "lint_paths"]
+
+# annotations whose *values* are traced arrays
+_ARRAY_ANN = {"Array", "ndarray", "ArrayLike"}
+# annotations whose *attributes* are traced arrays (state structs)
+_STRUCT_ANN = {
+    "SimState",
+    "NodeView",
+    "ArrivalBatch",
+    "Metrics",
+    "ScenarioState",
+}
+# attribute reads that yield static (trace-time) values even on tracers
+_DETAINT_ATTRS = {"shape", "dtype", "ndim", "size", "_fields", "sharding"}
+# call roots whose results are traced values
+_TRACED_CALL_ROOTS = {"jnp", "lax"}
+# jax transforms whose function arguments run under trace
+_TRACE_ENTRY_FNS = {
+    "jit",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "scan",
+    "cond",
+    "switch",
+    "while_loop",
+    "fori_loop",
+    "associative_scan",
+    "pallas_call",
+    "shard_map",
+    "checkpoint",
+    "remat",
+    "custom_vjp",
+    "custom_jvp",
+}
+_CONFIG_NAME_RE = re.compile(r"(^cfg$|^config$|_cfg$|_config$)")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _ann_tail(ann: Optional[ast.AST]) -> Optional[str]:
+    """Trailing identifier of an annotation ('jax.Array' -> 'Array')."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split(".")[-1].strip("'\" ")
+    if isinstance(ann, ast.Subscript):  # Optional[X] / Tuple[X, ...]
+        return _ann_tail(ann.slice)
+    d = _dotted(ann)
+    return d.split(".")[-1] if d else None
+
+
+def _walk_excl_nested(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body, not descending into nested function defs."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _annotation_node_ids(fn: ast.AST) -> Set[int]:
+    """ids of every AST node inside an annotation (skipped by value rules)."""
+    roots: List[ast.AST] = []
+    args = fn.args
+    for p in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+        if p.annotation is not None:
+            roots.append(p.annotation)
+    if getattr(fn, "returns", None) is not None:
+        roots.append(fn.returns)
+    for node in _walk_excl_nested(fn):
+        if isinstance(node, ast.AnnAssign) and node.annotation is not None:
+            roots.append(node.annotation)
+    out: Set[int] = set()
+    for r in roots:
+        out.add(id(r))
+        out.update(id(n) for n in ast.walk(r))
+    return out
+
+
+@dataclasses.dataclass
+class _FuncInfo:
+    module: str  # module key (file path as string)
+    name: str
+    qualname: str  # dotted path through classes AND functions
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    parent_qual: Optional[str]  # nearest enclosing *function* qualname
+    is_method: bool  # direct child of a ClassDef
+
+
+@dataclasses.dataclass
+class _ModuleInfo:
+    path: Path
+    tree: ast.Module
+    # import alias -> dotted module path ("repro.core.airlock")
+    import_mod: Dict[str, str]
+    # imported object alias -> (dotted module, original name)
+    import_obj: Dict[str, Tuple[str, str]]
+    by_qual: Dict[str, _FuncInfo]
+    # lexical children visible by bare name: parent function qualname
+    # (None = module level) -> {name: qualname}; methods excluded because
+    # they are only reachable via attribute access, never by bare name
+    children: Dict[Optional[str], Dict[str, str]]
+    # last-resort bare-name map: name -> non-method def qualnames anywhere
+    # in the module (catches `step = make_step(...)` then `scan(step, ...)`
+    # where the traced callee is a factory-made closure, not a lexical def)
+    fallback: Dict[str, List[str]]
+    numpy_aliases: Set[str]
+
+    def module_level(self) -> Dict[str, _FuncInfo]:
+        return {
+            fi.name: fi
+            for fi in self.by_qual.values()
+            if fi.parent_qual is None and not fi.is_method
+        }
+
+
+def _index_module(path: Path, tree: ast.Module) -> _ModuleInfo:
+    import_mod: Dict[str, str] = {}
+    import_obj: Dict[str, Tuple[str, str]] = {}
+    numpy_aliases: Set[str] = set()
+    by_qual: Dict[str, _FuncInfo] = {}
+    children: Dict[Optional[str], Dict[str, str]] = {}
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                alias = a.asname or a.name.split(".")[0]
+                import_mod[alias] = a.name if a.asname else a.name.split(".")[0]
+                if a.name == "numpy":
+                    numpy_aliases.add(alias)
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                alias = a.asname or a.name
+                # `from x import y` may bind a submodule or an object; track
+                # both interpretations, resolution picks whichever exists
+                import_obj[alias] = (node.module, a.name)
+                import_mod[alias] = f"{node.module}.{a.name}"
+                if node.module == "numpy":
+                    numpy_aliases.add(alias)
+
+    def visit(
+        node: ast.AST,
+        prefix: List[str],
+        func_parent: Optional[str],
+        in_class: bool,
+    ) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = ".".join(prefix + [child.name])
+                fi = _FuncInfo(
+                    module=str(path),
+                    name=child.name,
+                    qualname=qual,
+                    node=child,
+                    parent_qual=func_parent,
+                    is_method=in_class,
+                )
+                by_qual[qual] = fi
+                if not in_class:
+                    children.setdefault(func_parent, {})[child.name] = qual
+                visit(child, prefix + [child.name], qual, False)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, prefix + [child.name], func_parent, True)
+            else:
+                visit(child, prefix, func_parent, in_class)
+
+    visit(tree, [], None, False)
+    fallback: Dict[str, List[str]] = {}
+    for qual, fi in by_qual.items():
+        if not fi.is_method:
+            fallback.setdefault(fi.name, []).append(qual)
+    return _ModuleInfo(
+        path,
+        tree,
+        import_mod,
+        import_obj,
+        by_qual,
+        children,
+        fallback,
+        numpy_aliases,
+    )
+
+
+class ProjectIndex:
+    """Parsed modules + the propagated traced-function set."""
+
+    def __init__(self, files: Sequence[Path], package_root: Optional[Path]):
+        self.package_root = package_root
+        self.modules: Dict[str, _ModuleInfo] = {}
+        for f in files:
+            tree = ast.parse(f.read_text())
+            self.modules[str(f)] = _index_module(f, tree)
+        self._mod_by_dotted: Dict[str, str] = {}
+        if package_root is not None:
+            for key, mi in self.modules.items():
+                try:
+                    rel = mi.path.resolve().relative_to(package_root.resolve())
+                except ValueError:
+                    continue
+                dotted = ".".join(rel.with_suffix("").parts)
+                if dotted.endswith(".__init__"):
+                    dotted = dotted[: -len(".__init__")]
+                self._mod_by_dotted[dotted] = key
+        self.traced: Set[Tuple[str, str]] = set()  # (module key, qualname)
+        self._propagate_traced()
+
+    # ---- traced-set construction ----------------------------------------
+
+    def _resolve_bare(
+        self, mi: _ModuleInfo, name: str, from_qual: Optional[str]
+    ) -> List[Tuple[str, str]]:
+        """Lexically resolve a bare name to (module_key, qualname) targets."""
+        cur = from_qual
+        while cur is not None:
+            scope = mi.children.get(cur, {})
+            if name in scope:
+                return [(str(mi.path), scope[name])]
+            fi = mi.by_qual.get(cur)
+            cur = fi.parent_qual if fi is not None else None
+        scope = mi.children.get(None, {})
+        if name in scope:
+            return [(str(mi.path), scope[name])]
+        if name in mi.import_obj:
+            mod, orig = mi.import_obj[name]
+            key = self._mod_by_dotted.get(mod)
+            if key is not None:
+                tgt = self.modules[key].module_level().get(orig)
+                if tgt is not None:
+                    return [(key, tgt.qualname)]
+        # unambiguous same-module fallback: the name may be a variable bound
+        # to a factory-built closure (`step = make_step(...)`); if exactly
+        # one non-method def in the module carries the name, assume it
+        cands = mi.fallback.get(name, [])
+        if len(cands) == 1:
+            return [(str(mi.path), cands[0])]
+        return []
+
+    def _resolve_call(
+        self, mi: _ModuleInfo, func: ast.AST, from_qual: Optional[str]
+    ) -> List[Tuple[str, str]]:
+        """Project (module_key, qualname) targets a call expression may hit."""
+        if isinstance(func, ast.Name):
+            return self._resolve_bare(mi, func.id, from_qual)
+        if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+            alias = func.value.id
+            if alias in mi.import_mod:
+                key = self._mod_by_dotted.get(mi.import_mod[alias])
+                if key is not None:
+                    tgt = self.modules[key].module_level().get(func.attr)
+                    if tgt is not None:
+                        return [(key, tgt.qualname)]
+        return []
+
+    def _scoped_calls(
+        self, mi: _ModuleInfo
+    ) -> Iterator[Tuple[ast.Call, Optional[str]]]:
+        """Every Call in the module with its enclosing function qualname."""
+        node_to_qual = {id(fi.node): q for q, fi in mi.by_qual.items()}
+
+        def visit(node: ast.AST, qual: Optional[str]) -> Iterator:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield from visit(child, node_to_qual.get(id(child), qual))
+                else:
+                    if isinstance(child, ast.Call):
+                        yield child, qual
+                    yield from visit(child, qual)
+
+        yield from visit(mi.tree, None)
+
+    def _seed_targets(self, mi: _ModuleInfo) -> List[Tuple[str, str]]:
+        """Functions syntactically handed to a jax trace entry point."""
+        seeds: List[Tuple[str, str]] = []
+
+        def fn_operands(call: ast.Call) -> List[ast.AST]:
+            ops = list(call.args) + [k.value for k in call.keywords]
+            out = []
+            for a in ops:
+                # functools.partial(kernel, ...) wrapping, e.g. in pallas_call
+                if (
+                    isinstance(a, ast.Call)
+                    and (_dotted(a.func) or "").split(".")[-1] == "partial"
+                    and a.args
+                ):
+                    out.append(a.args[0])
+                else:
+                    out.append(a)
+            return out
+
+        for call, qual in self._scoped_calls(mi):
+            d = _dotted(call.func)
+            if d and d.split(".")[-1] in _TRACE_ENTRY_FNS:
+                for a in fn_operands(call):
+                    if isinstance(a, ast.Name):
+                        seeds.extend(self._resolve_bare(mi, a.id, qual))
+                    else:
+                        seeds.extend(self._resolve_call(mi, a, qual))
+
+        for fi in mi.by_qual.values():
+            node = fi.node
+            # @jax.jit / @functools.partial(jax.jit, ...) decorations
+            for dec in node.decorator_list:
+                tgt = dec
+                if isinstance(dec, ast.Call):
+                    dd = (_dotted(dec.func) or "").split(".")[-1]
+                    if dd == "partial" and dec.args:
+                        tgt = dec.args[0]
+                    else:
+                        tgt = dec.func
+                d = _dotted(tgt)
+                if d and d.split(".")[-1] in _TRACE_ENTRY_FNS:
+                    seeds.append((fi.module, fi.qualname))
+            # Pallas kernel bodies: Ref parameters
+            params = node.args.args + node.args.kwonlyargs
+            if sum(p.arg.endswith("_ref") for p in params) >= 1:
+                seeds.append((fi.module, fi.qualname))
+        return seeds
+
+    def _propagate_traced(self) -> None:
+        work: List[Tuple[str, str]] = []
+        for mi in self.modules.values():
+            work.extend(self._seed_targets(mi))
+        while work:
+            item = work.pop()
+            if item in self.traced:
+                continue
+            key, qual = item
+            mi = self.modules.get(key)
+            if mi is None or qual not in mi.by_qual:
+                continue
+            self.traced.add(item)
+            fi = mi.by_qual[qual]
+            # nested defs inside a traced function run under the trace
+            for q, sub in mi.by_qual.items():
+                if sub.parent_qual == qual:
+                    work.append((key, q))
+            # calls reachable from the traced body (nested defs are walked
+            # when their own work item is popped, with their own scope)
+            for node in _walk_excl_nested(fi.node):
+                if isinstance(node, ast.Call):
+                    work.extend(self._resolve_call(mi, node.func, qual))
+
+    def is_traced(self, module_key: str, qualname: str) -> bool:
+        return (module_key, qualname) in self.traced
+
+
+# ---------------------------------------------------------------------------
+# LC101 / LC102: traced-function body checks
+# ---------------------------------------------------------------------------
+
+
+class _TaintPass:
+    """Forward taint pass over one traced function body."""
+
+    def __init__(self, fn: ast.AST):
+        self.tainted: Set[str] = set()
+        self.structs: Set[str] = set()
+        args = fn.args
+        params = list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        for p in params:
+            tail = _ann_tail(p.annotation)
+            if tail in _ARRAY_ANN:
+                self.tainted.add(p.arg)
+            elif tail in _STRUCT_ANN:
+                self.structs.add(p.arg)
+            elif p.arg.endswith("_ref"):
+                self.structs.add(p.arg)
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _DETAINT_ATTRS:
+                return False
+            if isinstance(node.value, ast.Name) and node.value.id in self.structs:
+                return True
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func) or ""
+            root = d.split(".")[0]
+            if root in _TRACED_CALL_ROOTS:
+                return True
+            if d.startswith(("jax.random.", "jax.lax.", "jax.nn.")) or d in (
+                "pl.program_id",
+                "pl.load",
+                "pl.num_programs",
+            ):
+                return True
+            if d in ("len", "isinstance", "range", "enumerate", "zip"):
+                return False
+            if isinstance(node.func, ast.Attribute) and self.expr_tainted(
+                node.func.value
+            ):
+                return True
+            return any(self.expr_tainted(a) for a in node.args) or any(
+                self.expr_tainted(k.value) for k in node.keywords
+            )
+        if isinstance(node, ast.BinOp):
+            return self.expr_tainted(node.left) or self.expr_tainted(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            # identity tests (`x is None`) are static even on tracers
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.expr_tainted(node.left) or any(
+                self.expr_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or self.expr_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        return False
+
+    def assign(self, targets: Iterable[ast.AST], tainted: bool) -> None:
+        for t in targets:
+            if isinstance(t, ast.Name):
+                if tainted:
+                    self.tainted.add(t.id)
+                else:
+                    self.tainted.discard(t.id)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                self.assign(t.elts, tainted)
+
+
+def _check_traced_body(fi: _FuncInfo, mi: _ModuleInfo, rel: str) -> List[Finding]:
+    out: List[Finding] = []
+    taint = _TaintPass(fi.node)
+    ann_ids = _annotation_node_ids(fi.node)
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # nested defs are linted as their own traced funcs
+            if isinstance(child, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = child.value
+                if value is not None:
+                    t = taint.expr_tainted(value)
+                    tgts = (
+                        child.targets
+                        if isinstance(child, ast.Assign)
+                        else [child.target]
+                    )
+                    taint.assign(tgts, t)
+            if isinstance(child, (ast.If, ast.While)) and taint.expr_tainted(
+                child.test
+            ):
+                kw = "while" if isinstance(child, ast.While) else "if"
+                out.append(
+                    Finding(
+                        rule="LC101",
+                        message=(
+                            f"Python `{kw}` on a traced value in traced "
+                            f"function `{fi.name}` — use jnp.where/lax.cond"
+                        ),
+                        file=rel,
+                        line=child.lineno,
+                    )
+                )
+            walk(child)
+
+    walk(fi.node)
+
+    for sub in _walk_excl_nested(fi.node):
+        if (
+            isinstance(sub, ast.Attribute)
+            and isinstance(sub.value, ast.Name)
+            and sub.value.id in mi.numpy_aliases
+            and id(sub) not in ann_ids
+        ):
+            out.append(
+                Finding(
+                    rule="LC102",
+                    message=(
+                        f"`{sub.value.id}.{sub.attr}` inside traced function "
+                        f"`{fi.name}` — numpy does not trace; use jnp"
+                    ),
+                    file=rel,
+                    line=sub.lineno,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LC103: kernel package ops discipline
+# ---------------------------------------------------------------------------
+
+
+def _check_kernel_pkg(
+    mi: _ModuleInfo,
+    index: ProjectIndex,
+    tests_root: Optional[Path],
+    rel: str,
+) -> List[Finding]:
+    out: List[Finding] = []
+    pkg = mi.path.parent
+    module_level = mi.module_level()
+    ref_names: Set[str] = set(module_level)
+    ref_path = pkg / "ref.py"
+    ref_key = str(ref_path)
+    if ref_key in index.modules:
+        ref_names |= set(index.modules[ref_key].module_level())
+    elif ref_path.exists():
+        try:
+            ref_names |= {
+                n.name
+                for n in ast.walk(ast.parse(ref_path.read_text()))
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+        except SyntaxError:
+            pass
+    # also count re-exported names (`from .ref import foo_ref`)
+    ref_names |= set(mi.import_obj)
+
+    tests_blob = ""
+    if tests_root is not None and tests_root.is_dir():
+        tests_blob = "\n".join(
+            p.read_text() for p in sorted(tests_root.rglob("*.py"))
+        )
+
+    for name, fi in module_level.items():
+        if name.startswith("_") or name.endswith("_ref"):
+            continue
+        if f"{name}_ref" not in ref_names:
+            out.append(
+                Finding(
+                    rule="LC103",
+                    message=(
+                        f"kernel op `{name}` has no `{name}_ref` oracle in "
+                        f"{pkg.name}/ (ops.py or ref.py)"
+                    ),
+                    file=rel,
+                    line=fi.node.lineno,
+                )
+            )
+        if tests_root is not None and not re.search(
+            rf"\b{re.escape(name)}\b", tests_blob
+        ):
+            out.append(
+                Finding(
+                    rule="LC103",
+                    message=(
+                        f"kernel op `{name}` is never referenced under "
+                        f"{tests_root.name}/ — parity coverage missing"
+                    ),
+                    file=rel,
+                    line=fi.node.lineno,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LC104: config mutation
+# ---------------------------------------------------------------------------
+
+
+def _config_like(name: str, ann_tails: Dict[str, str]) -> bool:
+    if name == "self":
+        return False
+    tail = ann_tails.get(name)
+    if tail is not None and tail.endswith("Config"):
+        return True
+    return bool(_CONFIG_NAME_RE.search(name))
+
+
+def _check_config_mutation(mi: _ModuleInfo, rel: str) -> List[Finding]:
+    out: List[Finding] = []
+    # annotation map: param/variable name -> annotation tail, module-wide
+    ann_tails: Dict[str, str] = {}
+    for node in ast.walk(mi.tree):
+        if isinstance(node, ast.arg) and node.annotation is not None:
+            tail = _ann_tail(node.annotation)
+            if tail:
+                ann_tails[node.arg] = tail
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+            node.target, ast.Name
+        ):
+            tail = _ann_tail(node.annotation)
+            if tail:
+                ann_tails[node.target.id] = tail
+
+    for node in ast.walk(mi.tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                if (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and _config_like(t.value.id, ann_tails)
+                ):
+                    out.append(
+                        Finding(
+                            rule="LC104",
+                            message=(
+                                f"attribute store `{t.value.id}.{t.attr} = "
+                                "...` mutates a config after construction"
+                            ),
+                            file=rel,
+                            line=node.lineno,
+                        )
+                    )
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d == "object.__setattr__" and node.args:
+                base = node.args[0]
+                if isinstance(base, ast.Name) and _config_like(
+                    base.id, ann_tails
+                ):
+                    out.append(
+                        Finding(
+                            rule="LC104",
+                            message=(
+                                "object.__setattr__ on frozen config "
+                                f"`{base.id}` bypasses immutability"
+                            ),
+                            file=rel,
+                            line=node.lineno,
+                        )
+                    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_paths(
+    files: Sequence[Path],
+    package_root: Optional[Path] = None,
+    tests_root: Optional[Path] = None,
+    repo_root: Optional[Path] = None,
+) -> List[Finding]:
+    """Lint an explicit file set (project mode passes all of ``src/``)."""
+    files = [Path(f) for f in files]
+    index = ProjectIndex(files, package_root)
+    out: List[Finding] = []
+    for key, mi in index.modules.items():
+        rel = str(mi.path)
+        if repo_root is not None:
+            try:
+                rel = str(mi.path.resolve().relative_to(repo_root.resolve()))
+            except ValueError:
+                pass
+        for qual, fi in mi.by_qual.items():
+            if index.is_traced(key, qual):
+                out.extend(_check_traced_body(fi, mi, rel))
+        if mi.path.name == "ops.py" and (mi.path.parent / "kernel.py").exists():
+            out.extend(_check_kernel_pkg(mi, index, tests_root, rel))
+        out.extend(_check_config_mutation(mi, rel))
+    out.sort(key=lambda f: (f.file or "", f.line or 0, f.rule))
+    return out
+
+
+def run_lint(
+    src_root: Path,
+    tests_root: Optional[Path] = None,
+    repo_root: Optional[Path] = None,
+) -> List[Finding]:
+    """Full-tree lint: every ``*.py`` under ``src_root``."""
+    files = sorted(src_root.rglob("*.py"))
+    return lint_paths(
+        files,
+        package_root=src_root,
+        tests_root=tests_root,
+        repo_root=repo_root or src_root.parent,
+    )

@@ -1,0 +1,545 @@
+"""Plane 1: jaxpr trace audit of the engine tick.
+
+Traces ``engine.make_step`` (wrapped in the same ``lax.scan`` the engine
+compiles) to a jaxpr — via ``jax.make_jaxpr``, never executing a tick — and
+checks the static-config discipline the repo's performance story depends on:
+
+  * LC204 — ``cfg.use_pallas`` is a static branch; the jnp and Pallas sides
+    must agree on every output aval, checked per hot-path op (the five
+    ``core.hotpath`` entries) and for the whole step closure.
+  * LC201 — any config field that changes the traced jaxpr must also change
+    the compiled-runner cache key. For ``ScenarioConfig`` that key is
+    ``signature()``: each leaf field is perturbed under a preset that
+    activates it (mmpp fields under ``bursty``, disruption fields under
+    ``churn``, ...) and the jaxpr fingerprint is compared against the
+    signature delta — a fingerprint change without a signature change is
+    exactly the PR 3 cache-collision bug. For ``LaminarConfig`` the cache
+    key is the frozen dataclass itself (one engine per config), so the audit
+    statically requires every config class to be frozen with all fields
+    participating in equality.
+  * LC202 / LC203 — dtype hazards in the scan body: weak-typed float carry
+    legs (re-promotion bait), any float64 aval (host numpy leakage), and
+    ``convert_element_type`` narrowing float32 to bf16/f16 inside the body
+    (silently breaks bit-for-bit jnp-vs-Pallas parity).
+
+The audit runs on a deliberately tiny geometry (64 nodes, 256 probe slots)
+— jaxpr *structure* does not depend on array sizes, and tracing stays
+around a second per variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.core import engine, hotpath
+from repro.core.config import (
+    BaselineConfig,
+    LaminarConfig,
+    MemoryConfig,
+    WorkloadConfig,
+)
+from repro.core.state import init_state
+from repro.workloads.disruption import DisruptionConfig
+from repro.workloads.scenario import SCENARIOS, ScenarioConfig
+from repro.workloads.schedule import KINDS, ScheduleConfig
+
+__all__ = [
+    "audit_config",
+    "audit_dtypes",
+    "audit_mode_parity",
+    "audit_signature_coverage",
+    "compare_branch_avals",
+    "fingerprint_jaxpr",
+    "run_signature_audit",
+    "run_trace_audit",
+    "trace_step",
+]
+
+AUDIT_LAM = 3.0  # fixed per-tick rate: lam is keyed separately by the engine
+SCAN_LEN = 2
+
+
+def audit_config(use_pallas: bool = False) -> LaminarConfig:
+    """Tiny geometry with the full feature surface (memory + Airlock) on."""
+    return LaminarConfig(
+        num_nodes=64,
+        zone_size=32,
+        probe_capacity=256,
+        max_arrivals_per_tick=32,
+        horizon_ms=10.0,
+        airlock=True,
+        memory=MemoryConfig(enabled=True),
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# tracing + fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def trace_step(
+    cfg: LaminarConfig,
+    scenario: Optional[ScenarioConfig] = None,
+    state: Any = None,
+) -> jax.core.ClosedJaxpr:
+    """Jaxpr of ``scan(make_step(cfg, lam, scenario))`` — no execution."""
+    s = init_state(cfg, 0) if state is None else state
+    step = engine.make_step(cfg, AUDIT_LAM, scenario)
+    return jax.make_jaxpr(
+        lambda s0: jax.lax.scan(step, s0, None, length=SCAN_LEN)
+    )(s)
+
+
+def fingerprint_jaxpr(closed: Any) -> str:
+    """Stable digest of a ClosedJaxpr: printed eqns + closed-over consts.
+
+    ``make_jaxpr`` assigns variable names deterministically, so the printed
+    form is a faithful structural identity; scalar literals print inline
+    (which is what lets a perturbed static float show up here), and array
+    consts are hashed by value.
+    """
+    h = hashlib.sha256(str(closed.jaxpr).encode())
+    for c in closed.consts:
+        arr = np.asarray(c)
+        h.update(str((arr.shape, arr.dtype)).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# LC201: cache-key signature coverage
+# ---------------------------------------------------------------------------
+
+# Which preset activates which ScenarioConfig leaf: a field only shapes the
+# jaxpr when its code path is traced (mmpp knobs are dead under a
+# stationary schedule), so each is audited where it is live.
+SCENARIO_FIELD_PLAN: Dict[str, Tuple[str, ...]] = {
+    "stationary": ("name", "schedule.kind", "disruption.enabled"),
+    "bursty": (
+        "schedule.lam_max_factor",
+        "schedule.mmpp_dwell_ms",
+        "schedule.mmpp_burst_prob",
+        "schedule.mmpp_lo_factor",
+        "schedule.mmpp_hi_factor",
+    ),
+    "diurnal": ("schedule.diurnal_period_ms", "schedule.diurnal_amplitude"),
+    "flash": (
+        "schedule.flash_period_ms",
+        "schedule.flash_width_ms",
+        "schedule.flash_amplitude",
+    ),
+    "churn": (
+        "disruption.fail_event_prob",
+        "disruption.fail_block",
+        "disruption.downtime_ms",
+        "disruption.drain",
+    ),
+}
+
+_KIND_CYCLE = {k: KINDS[(i + 1) % len(KINDS)] for i, k in enumerate(KINDS)}
+
+
+def perturb_value(value: Any, field_name: str) -> Any:
+    """A same-type value guaranteed to differ from ``value``."""
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 1
+    if isinstance(value, float):
+        return value * 1.5 + 0.25
+    if isinstance(value, str):
+        if field_name == "kind":
+            return _KIND_CYCLE.get(value, KINDS[0])
+        return value + "_perturbed"
+    raise TypeError(f"no perturbation for {field_name}={value!r}")
+
+
+def perturb_field(obj: Any, path: str) -> Any:
+    """Frozen-dataclass copy of ``obj`` with dotted-path leaf perturbed."""
+    head, _, rest = path.partition(".")
+    value = getattr(obj, head)
+    new = perturb_field(value, rest) if rest else perturb_value(value, head)
+    return dataclasses.replace(obj, **{head: new})
+
+
+def audit_signature_coverage(
+    base: Any,
+    fields: Sequence[str],
+    trace_fn: Callable[[Any], Any],
+    signature_fn: Optional[Callable[[Any], Any]] = None,
+    subject: str = "ScenarioConfig",
+    base_jaxpr: Any = None,
+) -> List[Finding]:
+    """Perturb each field; flag jaxpr-changing fields the signature misses.
+
+    ``trace_fn(obj) -> ClosedJaxpr`` defines the traced computation under
+    audit; ``signature_fn`` defaults to ``obj.signature()``. Over-keying
+    (signature changes, jaxpr does not) is deliberately NOT a finding —
+    a too-fine cache key costs one compile, a too-coarse one reuses the
+    wrong program.
+    """
+    sig = signature_fn or (lambda o: o.signature())
+    base_fp = fingerprint_jaxpr(
+        base_jaxpr if base_jaxpr is not None else trace_fn(base)
+    )
+    base_sig = sig(base)
+    findings: List[Finding] = []
+    for path in fields:
+        pert = perturb_field(base, path)
+        fp = fingerprint_jaxpr(trace_fn(pert))
+        if fp != base_fp and sig(pert) == base_sig:
+            findings.append(
+                Finding(
+                    rule="LC201",
+                    message=(
+                        f"{subject} field `{path}` changes the traced jaxpr "
+                        "but leaves the cache-key signature unchanged — two "
+                        "configs differing only in this field would share "
+                        "one compiled runner (the PR 3 bug class)"
+                    ),
+                )
+            )
+    return findings
+
+
+_CONFIG_CLASSES = (
+    LaminarConfig,
+    WorkloadConfig,
+    MemoryConfig,
+    BaselineConfig,
+    ScenarioConfig,
+    ScheduleConfig,
+    DisruptionConfig,
+)
+
+
+def check_config_declarations() -> List[Finding]:
+    """LaminarConfig-side LC201: the cache key is the frozen dataclass value.
+
+    The engine holds one ``_compiled`` dict per config instance, so a
+    ``LaminarConfig`` field is part of the cache identity iff it
+    participates in the dataclass value (frozen + ``compare=True``). A field
+    declared ``compare=False``, or an unfrozen config, would let two
+    differing configs alias one compiled runner.
+    """
+    findings: List[Finding] = []
+    for cls in _CONFIG_CLASSES:
+        if not cls.__dataclass_params__.frozen:
+            findings.append(
+                Finding(
+                    rule="LC201",
+                    message=(
+                        f"{cls.__name__} is not frozen — static config "
+                        "closed over by jitted steps must be immutable and "
+                        "hash by value"
+                    ),
+                )
+            )
+        for f in dataclasses.fields(cls):
+            if not f.compare:
+                findings.append(
+                    Finding(
+                        rule="LC201",
+                        message=(
+                            f"{cls.__name__}.{f.name} is declared "
+                            "compare=False — it is excluded from the config "
+                            "value identity and therefore from every cache "
+                            "key built on it"
+                        ),
+                    )
+                )
+    return findings
+
+
+def run_signature_audit(
+    cfg: Optional[LaminarConfig] = None,
+    state: Any = None,
+    progress: Optional[Callable[[str], None]] = None,
+) -> List[Finding]:
+    """Full ScenarioConfig field sweep across the activating presets."""
+    log = progress or (lambda m: None)
+    cfg = cfg or audit_config()
+    s = init_state(cfg, 0) if state is None else state
+    findings: List[Finding] = []
+    for preset, fields in SCENARIO_FIELD_PLAN.items():
+        log(f"trace: signature audit [{preset}] ({len(fields)} fields)")
+        base = SCENARIOS[preset]
+        findings.extend(
+            audit_signature_coverage(
+                base,
+                fields,
+                lambda sc: trace_step(cfg, sc, s),
+                subject=f"ScenarioConfig[{preset}]",
+            )
+        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# LC202 / LC203: dtype hazards
+# ---------------------------------------------------------------------------
+
+_NARROW_FLOATS = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+
+def _walk_jaxprs(jaxpr: Any):
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for p in eqn.params.values():
+            vals = p if isinstance(p, (list, tuple)) else (p,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _walk_jaxprs(inner)
+                elif hasattr(v, "eqns"):
+                    yield from _walk_jaxprs(v)
+
+
+def carry_leaf_names(state: Any) -> List[str]:
+    """Human names of the scan-carry legs, in flattening order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def audit_dtypes(
+    closed: Any, carry_names: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # scan-carry weak types: the carry legs are the engine state — a weak
+    # float leg silently re-promotes on contact with Python scalars
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name != "scan":
+            continue
+        body = eqn.params["jaxpr"]
+        nc = eqn.params["num_consts"]
+        ncar = eqn.params["num_carry"]
+        carry_avals = body.in_avals[nc : nc + ncar]
+        for i, av in enumerate(carry_avals):
+            if (
+                jnp.issubdtype(av.dtype, jnp.floating)
+                and getattr(av, "weak_type", False)
+            ):
+                name = (
+                    carry_names[i]
+                    if carry_names and i < len(carry_names)
+                    else f"carry[{i}]"
+                )
+                findings.append(
+                    Finding(
+                        rule="LC202",
+                        message=(
+                            f"scan carry leg {name} is a weak-typed "
+                            f"{av.dtype} — pin it with an explicit dtype"
+                        ),
+                    )
+                )
+
+    seen: set = set()
+    for jaxpr in _walk_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in list(eqn.outvars) + list(eqn.invars):
+                av = getattr(v, "aval", None)
+                dt = getattr(av, "dtype", None)
+                # str compare: PRNG-key extended dtypes reject jnp.dtype()
+                if dt is not None and str(dt) == "float64":
+                    key = ("f64", eqn.primitive.name)
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append(
+                            Finding(
+                                rule="LC202",
+                                message=(
+                                    "float64 aval in the traced tick (at "
+                                    f"`{eqn.primitive.name}`) — host numpy "
+                                    "leaked into the jitted path"
+                                ),
+                            )
+                        )
+            if eqn.primitive.name == "convert_element_type":
+                src = getattr(eqn.invars[0], "aval", None)
+                new = jnp.dtype(eqn.params["new_dtype"])
+                if (
+                    src is not None
+                    and jnp.dtype(src.dtype) == jnp.dtype(jnp.float32)
+                    and new in _NARROW_FLOATS
+                ):
+                    key = ("narrow", str(new))
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append(
+                            Finding(
+                                rule="LC203",
+                                message=(
+                                    "float32 value narrowed to "
+                                    f"{new} inside the traced tick — "
+                                    "accumulator precision loss breaks "
+                                    "jnp-vs-Pallas bit parity"
+                                ),
+                            )
+                        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# LC204: jnp-vs-Pallas aval parity
+# ---------------------------------------------------------------------------
+
+
+def _aval_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda a: (tuple(a.shape), str(jnp.dtype(a.dtype))), tree)
+
+
+def compare_branch_avals(
+    name: str,
+    fn_jnp: Callable,
+    fn_pallas: Callable,
+    args: Sequence[Any],
+    file: Optional[str] = None,
+) -> List[Finding]:
+    """LC204 for one dispatch pair: both branches must agree on avals."""
+    out_j = _aval_tree(jax.eval_shape(fn_jnp, *args))
+    out_p = _aval_tree(jax.eval_shape(fn_pallas, *args))
+    if out_j == out_p:
+        return []
+    return [
+        Finding(
+            rule="LC204",
+            message=(
+                f"{name}: jnp branch avals {out_j} != Pallas branch "
+                f"avals {out_p}"
+            ),
+            file=file,
+        )
+    ]
+
+
+def _hotpath_op_cases(cfg: LaminarConfig, s: Any):
+    """Representative abstract operands for each ``core.hotpath`` entry."""
+    N = cfg.num_nodes
+    A = cfg.atoms_per_node
+    W = A // 32
+    P = cfg.probe_capacity
+    K = cfg.candidate_k
+    Z = cfg.num_zones
+    M = cfg.zone_size
+    f32, i32, u32, b8 = jnp.float32, jnp.int32, jnp.uint32, jnp.bool_
+    sds = jax.ShapeDtypeStruct
+    return [
+        (
+            "bitmap_fit",
+            lambda c: lambda words, mass, contig: hotpath.bitmap_fit(
+                c, words, mass, contig
+            ),
+            (sds((N, W), u32), sds((N,), i32), sds((N,), b8)),
+        ),
+        (
+            "bitmap_fit_blocked",
+            lambda c: lambda words, mass, contig, bits: hotpath.bitmap_fit_blocked(
+                c, words, mass, contig, bits=bits
+            ),
+            (
+                sds((Z, M, W), u32),
+                sds((Z, M), i32),
+                sds((Z, M), b8),
+                sds((Z * M, A), i32),
+            ),
+        ),
+        (
+            "utility_topk",
+            lambda c: lambda sp, hp, eps, feas, gamma: hotpath.utility_topk(
+                c, sp, hp, eps, feas, gamma
+            ),
+            (
+                sds((P, K), f32),
+                sds((P, K), f32),
+                sds((P, K), f32),
+                sds((P, K), b8),
+                sds((), f32),
+            ),
+        ),
+        (
+            "zone_aggregate",
+            lambda c: lambda sg, hg, mask: hotpath.zone_aggregate(
+                c, sg, hg, mask
+            ),
+            (sds((Z, M), f32), sds((Z, M), f32), sds((Z, M), b8)),
+        ),
+        ("survival_scan", lambda c: lambda st: hotpath.survival_scan(c, st), (s,)),
+    ]
+
+
+def audit_mode_parity(
+    state: Any = None, progress: Optional[Callable[[str], None]] = None
+) -> List[Finding]:
+    log = progress or (lambda m: None)
+    cfg_j = audit_config(use_pallas=False)
+    cfg_p = audit_config(use_pallas=True)
+    s = init_state(cfg_j, 0) if state is None else state
+    findings: List[Finding] = []
+
+    for name, build, args in _hotpath_op_cases(cfg_j, s):
+        log(f"trace: mode parity [{name}]")
+        findings.extend(
+            compare_branch_avals(
+                f"hotpath.{name}",
+                build(cfg_j),
+                build(cfg_p),
+                args,
+                file="src/repro/core/hotpath.py",
+            )
+        )
+
+    log("trace: mode parity [whole step]")
+    step_j = engine.make_step(cfg_j, AUDIT_LAM)
+    step_p = engine.make_step(cfg_p, AUDIT_LAM)
+    out_j = _aval_tree(jax.eval_shape(step_j, s, None))
+    out_p = _aval_tree(jax.eval_shape(step_p, s, None))
+    if out_j != out_p:
+        diffs = []
+        flat_j, _ = jax.tree_util.tree_flatten_with_path(out_j)
+        flat_p, _ = jax.tree_util.tree_flatten_with_path(out_p)
+        for (pj, vj), (_, vp) in zip(flat_j, flat_p):
+            if vj != vp:
+                diffs.append(f"{jax.tree_util.keystr(pj)}: {vj} vs {vp}")
+        findings.append(
+            Finding(
+                rule="LC204",
+                message=(
+                    "engine.make_step: jnp and Pallas step closures disagree "
+                    "on output avals: " + "; ".join(diffs[:8])
+                ),
+                file="src/repro/core/engine.py",
+            )
+        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def run_trace_audit(
+    progress: Optional[Callable[[str], None]] = None,
+) -> List[Finding]:
+    log = progress or (lambda m: None)
+    cfg = audit_config()
+    s = init_state(cfg, 0)
+    findings: List[Finding] = []
+    findings.extend(check_config_declarations())
+    findings.extend(audit_mode_parity(state=s, progress=progress))
+    log("trace: dtype audit")
+    closed = trace_step(cfg, None, s)
+    findings.extend(audit_dtypes(closed, carry_leaf_names(s)))
+    findings.extend(run_signature_audit(cfg, s, progress=progress))
+    return findings

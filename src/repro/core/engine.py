@@ -15,7 +15,6 @@ per-task Python control flow anywhere.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax

@@ -5,9 +5,14 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.bitmap_fit.kernel import bitmap_fit_pallas
-from repro.kernels.bitmap_fit.ref import bitmap_fit_ref
+from repro.kernels.bitmap_fit.ref import bitmap_fit_blocked_ref, bitmap_fit_ref
 
-__all__ = ["bitmap_fit", "bitmap_fit_ref"]
+__all__ = [
+    "bitmap_fit",
+    "bitmap_fit_blocked",
+    "bitmap_fit_blocked_ref",
+    "bitmap_fit_ref",
+]
 
 
 def _on_cpu() -> bool:

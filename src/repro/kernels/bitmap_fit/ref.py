@@ -20,3 +20,19 @@ def bitmap_fit_ref(
     ok = jnp.where(contig.astype(bool), runs >= m, free >= m)
     ok = ok | (m == 0)
     return ok.astype(jnp.int32)
+
+
+def bitmap_fit_blocked_ref(
+    words: jax.Array, mass: jax.Array, contig: jax.Array
+) -> jax.Array:
+    """Zone-blocked oracle: ``(Z, M, W)`` words, ``(Z, M)`` demand -> (Z, M).
+
+    Row feasibility is independent of the blocking, so the oracle is the
+    flat reference on the flattened rows reshaped back — the same identity
+    the Pallas route relies on.
+    """
+    Z, M, W = words.shape
+    flat = bitmap_fit_ref(
+        words.reshape(Z * M, W), mass.reshape(-1), contig.reshape(-1)
+    )
+    return flat.reshape(Z, M)

@@ -8,7 +8,6 @@ what ``jit(...).lower()`` needs for the multi-pod dry-run.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

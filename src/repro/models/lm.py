@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, blocks
+from repro.models import blocks
 from repro.models import common as cm
 from repro.models.common import ArchConfig, Params
 

@@ -1,0 +1,73 @@
+"""LC301/LC302/LC303 fixture: mis-covered Pallas grids, survival-scan style.
+
+``tail_dropping_grid`` reintroduces the historical survival-scan BlockSpec
+bug shape: the probe table is padded to a block multiple but the grid is
+built one block short, so the tail block is never written.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.kernel_contract import audit_pallas_fn
+
+BLOCK = 128
+PADDED = 1024  # probe table padded to a block multiple
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def tail_dropping_grid():
+    # the bug: `PADDED // BLOCK - 1` drops the tail block entirely
+    def run(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(PADDED // BLOCK - 1,),
+            in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            out_shape=_sds((PADDED,)),
+            interpret=True,
+        )(x)
+
+    return audit_pallas_fn(run, _sds((PADDED,)), name="survival_scan[tail-dropped]")
+
+
+def index_map_overshoot():
+    # off-by-one index map: the last grid step addresses one block past the end
+    def run(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(PADDED // BLOCK,),
+            in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i + 1,))],
+            out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            out_shape=_sds((PADDED,)),
+            interpret=True,
+        )(x)
+
+    return audit_pallas_fn(run, _sds((PADDED,)), name="survival_scan[overshoot]")
+
+
+def vmem_over_budget():
+    # whole-array blocks against a deliberately tiny budget
+    def run(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((PADDED,), lambda i: (0,))],
+            out_specs=pl.BlockSpec((PADDED,), lambda i: (0,)),
+            out_shape=_sds((PADDED,)),
+            interpret=True,
+        )(x)
+
+    return audit_pallas_fn(
+        run, _sds((PADDED,)), name="survival_scan[hog]", budget_bytes=1024
+    )
+
+
+LAMINAR_CHECK_TARGETS = [tail_dropping_grid, index_map_overshoot, vmem_over_budget]

@@ -1,0 +1,29 @@
+"""LC202/LC203 fixture: dtype hazards in a scanned body."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.trace_audit import audit_dtypes
+
+
+def weak_typed_carry():
+    # carry seeded from a bare Python float: weak f32 leg (LC202)
+    def body(c, _):
+        return c * 1.0, None
+
+    closed = jax.make_jaxpr(
+        lambda c0: jax.lax.scan(body, c0, None, length=3)
+    )(1.0)
+    return audit_dtypes(closed, carry_names=["residual_ema"])
+
+
+def f32_narrowed_to_bf16():
+    # accumulate in bf16, cast back: parity-breaking narrowing (LC203)
+    def fn(x):
+        return (x.astype(jnp.bfloat16) * 2).astype(jnp.float32)
+
+    closed = jax.make_jaxpr(fn)(jnp.ones((4,), jnp.float32))
+    return audit_dtypes(closed)
+
+
+LAMINAR_CHECK_TARGETS = [weak_typed_carry, f32_narrowed_to_bf16]

@@ -1,0 +1,7 @@
+"""LC103 fixture: a public kernel op with no ``scale_ref`` oracle anywhere."""
+
+import jax
+
+
+def scale(x: jax.Array) -> jax.Array:  # LC103: no scale_ref twin
+    return x * 2.0

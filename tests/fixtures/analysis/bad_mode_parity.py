@@ -1,0 +1,26 @@
+"""LC204/LC304 fixture: dispatch branches / kernel-vs-ref aval mismatches."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.kernel_contract import compare_output_avals
+from repro.analysis.trace_audit import compare_branch_avals
+
+
+def branches_disagree_on_dtype():
+    # a use_pallas-style dispatch whose Pallas side narrows the output
+    return compare_branch_avals(
+        "toy_dispatch",
+        lambda x: x.astype(jnp.float32),
+        lambda x: x.astype(jnp.bfloat16),
+        (jax.ShapeDtypeStruct((8,), jnp.float32),),
+    )
+
+
+def kernel_ref_avals_disagree():
+    kernel_out = jax.ShapeDtypeStruct((8,), jnp.int32)
+    ref_out = jax.ShapeDtypeStruct((8,), jnp.float32)
+    return compare_output_avals("toy_kernel", kernel_out, ref_out)
+
+
+LAMINAR_CHECK_TARGETS = [branches_disagree_on_dtype, kernel_ref_avals_disagree]

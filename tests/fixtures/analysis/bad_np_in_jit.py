@@ -1,0 +1,9 @@
+"""LC102 fixture: host numpy called inside a traced function."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def normalize(x: jax.Array) -> jax.Array:
+    return x / np.linalg.norm(x)  # LC102: np does not trace

@@ -1,0 +1,31 @@
+"""LC201 fixture: the PR 3 scenario cache-key bug, reintroduced.
+
+Historically the compiled-runner cache keyed scenarios by too little — two
+scenarios sharing a base rate but differing in MMPP burst shape reused one
+compiled scan. ``ScenarioConfig.signature()`` now covers every field; this
+fixture swaps in the buggy name-only key and asserts the trace plane flags
+the field the key misses.
+"""
+
+from repro.analysis.trace_audit import (
+    audit_config,
+    audit_signature_coverage,
+    trace_step,
+)
+from repro.core.state import init_state
+from repro.workloads.scenario import SCENARIOS
+
+
+def cachekey_omits_mmpp_fields():
+    cfg = audit_config()
+    s = init_state(cfg, 0)
+    return audit_signature_coverage(
+        SCENARIOS["bursty"],
+        ("schedule.mmpp_hi_factor",),
+        lambda sc: trace_step(cfg, sc, s),
+        signature_fn=lambda sc: (sc.name,),  # the bug: name-only cache key
+        subject="ScenarioConfig[bursty, name-only key]",
+    )
+
+
+LAMINAR_CHECK_TARGETS = [cachekey_omits_mmpp_fields]

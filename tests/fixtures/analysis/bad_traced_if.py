@@ -1,0 +1,24 @@
+"""LC101 fixture: Python control flow on traced values inside jitted code."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_with_python_branch(x: jax.Array) -> jax.Array:
+    total = jnp.sum(x)
+    if total > 0:  # LC101: traced `if`
+        x = x * 2.0
+    while total > 1.0:  # LC101: traced `while`
+        total = total - 1.0
+    return x
+
+
+def outer(x: jax.Array):
+    def body(carry, _):
+        gate = jnp.tanh(carry)
+        if gate.mean() > 0.5:  # LC101: traced `if` inside a scanned body
+            carry = carry + 1.0
+        return carry, None
+
+    return jax.lax.scan(body, x, None, length=4)

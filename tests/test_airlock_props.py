@@ -17,7 +17,6 @@ exercised when ``hypothesis`` is absent (the @given tests then skip via
 ``tests/_hypothesis_compat.py``).
 """
 
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

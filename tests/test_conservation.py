@@ -24,7 +24,6 @@ a task and every per-metric golden would still pass. Two nets:
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

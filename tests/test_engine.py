@@ -8,11 +8,9 @@ survival, two-phase squatter recovery, regeneration under loss.
 
 import dataclasses
 
-import jax
 import numpy as np
-import pytest
 
-from repro.core import LaminarConfig, LaminarEngine, MemoryConfig, WorkloadConfig
+from repro.core import LaminarConfig, LaminarEngine, MemoryConfig
 from repro.core import bitmap
 from repro.core.state import EMPTY, RUNNING, SUSPENDED
 

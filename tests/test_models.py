@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get, get_smoke, list_archs
-from repro.configs.shapes import SHAPES
 from repro.models import lm
 
 B, S = 2, 24

@@ -4,8 +4,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.models import lm, moe

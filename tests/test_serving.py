@@ -2,7 +2,6 @@
 and the Absolute Priority Guarantee applied to sequences."""
 
 import numpy as np
-import pytest
 
 from repro.sched.serving import LaminarServingScheduler, ServeConfig
 

@@ -10,7 +10,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import LaminarConfig, LaminarEngine, MemoryConfig

@@ -1,11 +1,9 @@
 """Training substrate: optimizer, data, checkpoint, FT loop."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_smoke
