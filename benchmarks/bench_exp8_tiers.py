@@ -1,0 +1,169 @@
+"""Exp8: workload classes (tiers) under pressure — does strict tier
+precedence in the survival ladder actually protect prod?
+
+Sweeps scenario x tier-mix x {kernel-OOM, Airlock}. Each cell runs
+``NUM_SEEDS`` replicate seeds as ONE compiled ``vmap``'d scan
+(``LaminarEngine.run_batch``) with memory dynamics on. Arrivals draw a
+tier from the mix's categorical (``WorkloadConfig.tier_probs``); tier
+scales expected value (``tier_ev_mult``), and under Airlock the survival
+scan evicts strictly by (tier, score, slot) — every best-effort candidate
+on a node dies before any batch one, every batch one before any prod one.
+Kernel-OOM stays tier-blind, so its per-tier survival split is the
+experimental control: the ladder, not the ev scaling, produces the
+protection ordering (prod_survival >= be_survival under every scenario).
+
+``EXP8_SCENARIOS=stationary,storm`` / ``EXP8_MIXES=balanced`` (comma
+lists) restrict the sweep — the CI smoke uses exactly that subset.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks.common import (
+    RESULTS,
+    bench_cfg,
+    emit,
+    mean_over_seeds,
+    row_str,
+    run_seeds,
+)
+from repro.core import MemoryConfig
+from repro.core.config import TIER_MIXES, TIER_NAMES
+from repro.workloads import SCENARIOS
+
+NUM_SEEDS = 3
+
+EXP8_SCENARIOS = ("stationary", "bursty", "storm")
+
+SCALARS = tuple(
+    f"{nm}_{col}"
+    for nm in TIER_NAMES
+    for col in ("started", "oom", "reclaimed", "survival", "p99_ms")
+) + ("exec_survival_ratio", "reclaimed", "oom_kill_f", "oom_kill_l")
+
+
+def _names_from_env(var: str, default, universe) -> list:
+    env = os.environ.get(var, "")
+    if not env:
+        return list(default)
+    names = [n.strip() for n in env.split(",") if n.strip()]
+    unknown = [n for n in names if n not in universe]
+    if unknown:
+        raise SystemExit(f"{var}: unknown name(s) {unknown}")
+    return names
+
+
+def _merge_previous_rows(rows: list) -> list:
+    """A filtered run (EXP8_SCENARIOS / EXP8_MIXES set) must not erase the
+    other cells' persisted rows. Merge by (scenario, mix, airlock), keeping
+    sweep-registry order."""
+    path = RESULTS / "exp8_tiers.json"
+    filtered = os.environ.get("EXP8_SCENARIOS") or os.environ.get("EXP8_MIXES")
+    if not (filtered and path.exists()):
+        return rows
+    key = lambda r: (r.get("scenario"), r.get("mix"), bool(r.get("airlock")))  # noqa: E731
+    merged = {key(r): r for r in rows}
+    try:
+        old = json.loads(path.read_text()).get("rows", [])
+    except (json.JSONDecodeError, OSError):
+        return rows
+    for r in old:
+        merged.setdefault(key(r), r)
+    s_ord = {n: i for i, n in enumerate(EXP8_SCENARIOS)}
+    m_ord = {n: i for i, n in enumerate(TIER_MIXES)}
+    return sorted(
+        merged.values(),
+        key=lambda r: (
+            s_ord.get(r.get("scenario"), len(s_ord)),
+            m_ord.get(r.get("mix"), len(m_ord)),
+            bool(r.get("airlock")),
+        ),
+    )
+
+
+def run(full: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    seeds = [seed + i for i in range(NUM_SEEDS)]
+    scenarios = _names_from_env("EXP8_SCENARIOS", EXP8_SCENARIOS, SCENARIOS)
+    mixes = _names_from_env("EXP8_MIXES", TIER_MIXES, TIER_MIXES)
+    for name in scenarios:
+        for mix in mixes:
+            for airlock in (False, True):
+                cfg = bench_cfg(
+                    full=full,
+                    num_nodes=None if full else 256,
+                    rho=0.8,
+                    two_phase=False,
+                    regeneration=False,
+                    hop_loss=0.0,
+                    airlock=airlock,
+                    memory=MemoryConfig(enabled=True),
+                    scenario=SCENARIOS[name],
+                    horizon_ms=30_000.0 if full else 900.0,
+                )
+                cfg = dataclasses.replace(
+                    cfg,
+                    workload=dataclasses.replace(
+                        cfg.workload, tier_probs=TIER_MIXES[mix]
+                    ),
+                )
+                outs = run_seeds(cfg, seeds)  # ONE vmap'd scan per cell
+                mean = mean_over_seeds(outs, SCALARS)
+                row = {
+                    "scenario": name,
+                    "mix": mix,
+                    "airlock": airlock,
+                    "num_seeds": NUM_SEEDS,
+                    "exec_survival": mean["exec_survival_ratio"],
+                    "reclaimed": mean["reclaimed"],
+                    "oom_kills": mean["oom_kill_f"] + mean["oom_kill_l"],
+                }
+                for nm in TIER_NAMES:
+                    for col in (
+                        "started",
+                        "oom",
+                        "reclaimed",
+                        "survival",
+                        "p99_ms",
+                    ):
+                        row[f"{nm}_{col}"] = mean[f"{nm}_{col}"]
+                rows.append(row)
+                print(
+                    "  "
+                    + row_str(
+                        row,
+                        (
+                            "scenario",
+                            "mix",
+                            "airlock",
+                            "exec_survival",
+                            "prod_survival",
+                            "batch_survival",
+                            "be_survival",
+                            "prod_p99_ms",
+                            "be_p99_ms",
+                        ),
+                    )
+                )
+    on = [r for r in rows if r["airlock"]]
+    spread = min(r["prod_survival"] - r["be_survival"] for r in on) if on else float("nan")
+    emit(
+        "exp8_tiers",
+        {"rows": _merge_previous_rows(rows)},
+        t0,
+        derived=(
+            f"cells={len(rows)};"
+            f"min_tier_spread_airlock={spread:.4f};"
+            f"seeds={NUM_SEEDS}"
+        ),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ from benchmarks import (
     bench_exp5_airlock,
     bench_exp6_scenarios,
     bench_exp7_scale,
+    bench_exp8_tiers,
     bench_hotpath,
     bench_moe_router,
     bench_serving,
@@ -38,6 +39,7 @@ BENCHES = {
     "exp5": bench_exp5_airlock.run,
     "exp6": bench_exp6_scenarios.run,
     "exp7": bench_exp7_scale.run,
+    "exp8": bench_exp8_tiers.run,
     "control_work": bench_control_work.run,
     "hotpath": bench_hotpath.run,
     "moe_router": bench_moe_router.run,

@@ -402,6 +402,7 @@ def kernel_suite(geom: Dict[str, int]):
                 _sds((P,), i32),
                 _sds((P,), f32),
                 _sds((P,), f32),
+                _sds((P,), i32),  # tier
                 _sds((P,), b8),
                 _sds((P,), i32),
                 _sds((P,), i32),

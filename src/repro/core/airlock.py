@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import LaminarConfig
-from repro.core.state import EMPTY, RUNNING, SUSPENDED, SimState
+from repro.core.state import EMPTY, RUNNING, SUSPENDED, SimState, tier_counts
 from repro.core.arbiter import _free_atoms_at
 
 
@@ -75,6 +75,7 @@ def runtime_control(
         m = m._replace(
             oom_kill_f=m.oom_kill_f + jnp.sum((victim & ~s.contig).astype(jnp.int32)),
             oom_kill_l=m.oom_kill_l + jnp.sum((victim & s.contig).astype(jnp.int32)),
+            oom_kill_tier=m.oom_kill_tier + tier_counts(s.tier, victim),
         )
         return s._replace(
             st=jnp.where(victim, EMPTY, s.st),
@@ -139,6 +140,7 @@ def airlock_transitions(
         resumed_insitu=m.resumed_insitu + jnp.sum(resume.astype(jnp.int32)),
         reactivated=m.reactivated + jnp.sum(react.astype(jnp.int32)),
         reclaimed=m.reclaimed + jnp.sum(expire.astype(jnp.int32)),
+        reclaimed_tier=m.reclaimed_tier + tier_counts(s.tier, expire),
     )
     s = s._replace(
         st=st,

@@ -35,6 +35,7 @@ from repro.core.state import (
     RUNNING,
     SimState,
     latency_bucket,
+    tier_counts,
 )
 
 INF_TICK = jnp.int32(1 << 30)
@@ -231,6 +232,7 @@ def pending_stage(cfg: LaminarConfig, s: SimState) -> SimState:
         m = m._replace(
             migrated=m.migrated + jnp.sum(mig_ok.astype(jnp.int32)),
             reclaimed=m.reclaimed + jnp.sum(mig_fail.astype(jnp.int32)),
+            reclaimed_tier=m.reclaimed_tier + tier_counts(s.tier, mig_fail),
         )
 
     # ---- primary reservation expiry --------------------------------------
@@ -252,13 +254,18 @@ def pending_stage(cfg: LaminarConfig, s: SimState) -> SimState:
     hist = m.lat_hist.at[jnp.where(start_now, bucket, 0)].add(
         start_now.astype(jnp.int32)
     )
+    hist_tier = m.lat_hist_tier.at[
+        jnp.where(start_now, s.tier, 0), jnp.where(start_now, bucket, 0)
+    ].add(start_now.astype(jnp.int32))
     m = m._replace(
         started=m.started + jnp.sum(start_now.astype(jnp.int32)),
         started_f=m.started_f + jnp.sum((start_now & ~s.contig).astype(jnp.int32)),
         started_l=m.started_l + jnp.sum((start_now & s.contig).astype(jnp.int32)),
+        started_tier=m.started_tier + tier_counts(s.tier, start_now),
         reserve_expired=m.reserve_expired + jnp.sum(prim_exp.astype(jnp.int32)),
         squat_expired=m.squat_expired + jnp.sum(squat_exp.astype(jnp.int32)),
         lat_hist=hist,
+        lat_hist_tier=hist_tier,
     )
     return s._replace(
         st=st,
@@ -289,6 +296,7 @@ def completions(cfg: LaminarConfig, s: SimState) -> SimState:
         completed=m.completed + n_done,
         completed_f=m.completed_f + jnp.sum((done & ~s.contig).astype(jnp.int32)),
         completed_l=m.completed_l + jnp.sum((done & s.contig).astype(jnp.int32)),
+        completed_tier=m.completed_tier + tier_counts(s.tier, done),
     )
     return s._replace(
         st=jnp.where(done, EMPTY, s.st),

@@ -17,13 +17,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap, workload
-from repro.core.config import BaselineConfig, LaminarConfig
+from repro.core.config import NUM_TIERS, TIER_NAMES, BaselineConfig, LaminarConfig
 from repro.core.disrupt import disrupted_capacity
 from repro.core.state import (
     HIST_BUCKETS,
-    bucket_upper_ms,
+    hist_quantile,
     init_state,
     latency_bucket,
+    tier_counts,
 )
 from repro.workloads import schedule as wl_schedule
 from repro.workloads.disruption import disruption_step
@@ -46,17 +47,45 @@ class BaseMetrics(NamedTuple):
     retries: jax.Array
     spillbacks: jax.Array
     rollbacks: jax.Array
+    # started tasks killed by a hard node failure — the baselines' only
+    # post-start death, so it IS their execution-survival numerator. Distinct
+    # from ``failed``, which some models also use for pre-start give-ups.
+    disrupt_killed: jax.Array
+    # per-tier lifecycle counters, (NUM_TIERS,) each
+    started_tier: jax.Array
+    completed_tier: jax.Array
+    disrupt_killed_tier: jax.Array
     lat_hist: jax.Array
+    lat_hist_tier: jax.Array  # (NUM_TIERS, HIST_BUCKETS)
 
     @staticmethod
     def zeros() -> "BaseMetrics":
         z = jnp.zeros((), jnp.int32)
-        return BaseMetrics(*([z] * 9), jnp.zeros((HIST_BUCKETS,), jnp.int32))
+        zt = jnp.zeros((NUM_TIERS,), jnp.int32)
+        return BaseMetrics(
+            *([z] * 10),
+            started_tier=zt,
+            completed_tier=zt,
+            disrupt_killed_tier=zt,
+            lat_hist=jnp.zeros((HIST_BUCKETS,), jnp.int32),
+            lat_hist_tier=jnp.zeros((NUM_TIERS, HIST_BUCKETS), jnp.int32),
+        )
+
+
+# BaseMetrics fields that are arrays rather than scalar counters
+BASE_VECTOR_FIELDS = (
+    "started_tier",
+    "completed_tier",
+    "disrupt_killed_tier",
+    "lat_hist",
+    "lat_hist_tier",
+)
 
 
 class TaskTable(NamedTuple):
     st: jax.Array
     contig: jax.Array
+    tier: jax.Array  # workload class: 0 prod / 1 batch / 2 best-effort
     mass: jax.Array
     node: jax.Array
     shard: jax.Array
@@ -73,6 +102,7 @@ class TaskTable(NamedTuple):
         return TaskTable(
             st=zi,
             contig=jnp.zeros((P,), jnp.bool_),
+            tier=zi,
             mass=zi,
             node=jnp.full((P,), -1, jnp.int32),
             shard=zi,
@@ -176,7 +206,13 @@ def scenario_disrupt(
     if not d.drain:
         hit = (tt.alloc_node >= 0) & fail[jnp.clip(tt.alloc_node, 0, N - 1)]
         victim = (tt.st == B_RUNNING) & hit
-        m = m._replace(failed=m.failed + jnp.sum(victim.astype(jnp.int32)))
+        n_victim = jnp.sum(victim.astype(jnp.int32))
+        m = m._replace(
+            failed=m.failed + n_victim,
+            disrupt_killed=m.disrupt_killed + n_victim,
+            disrupt_killed_tier=m.disrupt_killed_tier
+            + tier_counts(tt.tier, victim),
+        )
         tt = tt._replace(
             st=jnp.where(victim, B_EMPTY, tt.st),
             alloc=jnp.where(victim[:, None], jnp.uint32(0), tt.alloc),
@@ -211,6 +247,7 @@ def inject(
     tt = tt._replace(
         st=put(tt.st, jnp.full((n_max,), B_QUEUED, jnp.int32)),
         contig=put(tt.contig, batch.contig),
+        tier=put(tt.tier, batch.tier),
         mass=put(tt.mass, batch.mass),
         node=put(tt.node, jnp.full((n_max,), -1, jnp.int32)),
         timer=put(tt.timer, jnp.zeros((n_max,), jnp.int32)),
@@ -234,10 +271,13 @@ def admit_fifo(
     free: jax.Array,
     cand: jax.Array,
     t: jax.Array,
-    hist: jax.Array,
+    m: BaseMetrics,
 ):
     """Admit at most one candidate per node (earliest arrival wins), against
-    the true bitmap. Returns (tt, free, admit_mask, reject_mask, n_started, hist).
+    the true bitmap. Returns (tt, free, m, admit_mask, reject_mask); the
+    start counters (global + per-tier) and latency histograms update here —
+    the ONE shared admission site — so per-tier accounting cannot drift
+    between the three baseline models.
     """
     P = tt.st.shape[0]
     N = cfg.num_nodes
@@ -275,8 +315,17 @@ def admit_fifo(
     )
     lat_ms = (t - tt.arrival).astype(jnp.float32) * cfg.dt_ms
     b = latency_bucket(lat_ms)
-    hist = hist.at[jnp.where(admit, b, 0)].add(admit.astype(jnp.int32))
-    return tt, free, admit, reject, jnp.sum(admit.astype(jnp.int32)), hist
+    hist = m.lat_hist.at[jnp.where(admit, b, 0)].add(admit.astype(jnp.int32))
+    hist_tier = m.lat_hist_tier.at[
+        jnp.where(admit, tt.tier, 0), jnp.where(admit, b, 0)
+    ].add(admit.astype(jnp.int32))
+    m = m._replace(
+        started=m.started + jnp.sum(admit.astype(jnp.int32)),
+        started_tier=m.started_tier + tier_counts(tt.tier, admit),
+        lat_hist=hist,
+        lat_hist_tier=hist_tier,
+    )
+    return tt, free, m, admit, reject
 
 
 def complete(cfg: LaminarConfig, tt: TaskTable, free: jax.Array, m: BaseMetrics):
@@ -287,7 +336,10 @@ def complete(cfg: LaminarConfig, tt: TaskTable, free: jax.Array, m: BaseMetrics)
     tgt = jnp.where(done, tt.alloc_node, cfg.num_nodes)
     acc = jnp.zeros((cfg.num_nodes + 1, free.shape[1]), jnp.uint32).at[tgt].add(upd)
     free = free | acc[:-1]
-    m = m._replace(completed=m.completed + jnp.sum(done.astype(jnp.int32)))
+    m = m._replace(
+        completed=m.completed + jnp.sum(done.astype(jnp.int32)),
+        completed_tier=m.completed_tier + tier_counts(tt.tier, done),
+    )
     tt = tt._replace(
         st=jnp.where(done, B_EMPTY, tt.st),
         service=service,
@@ -321,14 +373,16 @@ def summarize_baseline(cfg: LaminarConfig, m: BaseMetrics, tt: TaskTable):
     hist = np.asarray(mm.lat_hist, np.float64)
     total = hist.sum()
     if total > 0:
-        c = np.cumsum(hist) / total
-        uppers = bucket_upper_ms(np.arange(HIST_BUCKETS))
-        p50 = float(uppers[int(np.searchsorted(c, 0.50))])
-        p99 = float(uppers[int(np.searchsorted(c, 0.99))])
+        p50 = hist_quantile(hist, 0.50)
+        p99 = hist_quantile(hist, 0.99)
     else:
         p50 = p99 = float("nan")
-    return {
-        **{f: int(getattr(mm, f)) for f in BaseMetrics._fields if f != "lat_hist"},
+    out = {
+        **{
+            f: int(getattr(mm, f))
+            for f in BaseMetrics._fields
+            if f not in BASE_VECTOR_FIELDS
+        },
         "in_flight_end": in_flight,
         "start_success_ratio": int(mm.started) / max(arrived - in_flight, 1),
         "start_success_raw": int(mm.started) / arrived,
@@ -336,6 +390,31 @@ def summarize_baseline(cfg: LaminarConfig, m: BaseMetrics, tt: TaskTable):
         # scheduler ("infinite queuing disabled" -- saturation must show)
         "start_success_total": int(mm.started)
         / max(arrived + int(mm.dropped), 1),
+        # mirror of the engine's exec_survival_ratio: node-failure kills are
+        # the baselines' only post-start death
+        "exec_survival_ratio": 1.0
+        - int(mm.disrupt_killed) / max(int(mm.started), 1),
         "p50_ms": p50,
         "p99_ms": p99,
     }
+    tier_np = np.asarray(tt.tier)
+    resident_tier = np.bincount(
+        tier_np[st == B_RUNNING], minlength=NUM_TIERS
+    )[:NUM_TIERS]
+    for i, nm in enumerate(TIER_NAMES):
+        started_i = int(mm.started_tier[i])
+        th = np.asarray(mm.lat_hist_tier[i], np.float64)
+        out[f"{nm}_started"] = started_i
+        out[f"{nm}_completed"] = int(mm.completed_tier[i])
+        out[f"{nm}_disrupt_killed"] = int(mm.disrupt_killed_tier[i])
+        out[f"{nm}_resident_end"] = int(resident_tier[i])
+        out[f"{nm}_survival"] = 1.0 - int(
+            mm.disrupt_killed_tier[i]
+        ) / max(started_i, 1)
+        out[f"{nm}_p50_ms"] = (
+            hist_quantile(th, 0.50) if th.sum() > 0 else float("nan")
+        )
+        out[f"{nm}_p99_ms"] = (
+            hist_quantile(th, 0.99) if th.sum() > 0 else float("nan")
+        )
+    return out

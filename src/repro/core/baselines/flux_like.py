@@ -114,8 +114,8 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
 
         # --- leaf arbitration: collisions roll back up the tree ----------------
         at_leaf = (tt.st == C.B_QUEUED) & (tt.shard >= 0)
-        tt, free, admit, reject, n_started, hist = C.admit_fifo(
-            cfg, tt, free, at_leaf, s.t, m.lat_hist
+        tt, free, m, admit, reject = C.admit_fifo(
+            cfg, tt, free, at_leaf, s.t, m
         )
         climb = jnp.minimum(tt.retries + 1, levels).astype(jnp.float32)
         rb_ms = climb * (bcfg.flux_rollback_hop_ms + bcfg.flux_backoff_ms_per_level)
@@ -129,9 +129,7 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
             retries=jnp.where(reject, tt.retries + 1, tt.retries),
         )
         m = m._replace(
-            started=m.started + n_started,
             rollbacks=m.rollbacks + jnp.sum(reject.astype(jnp.int32)),
-            lat_hist=hist,
         )
 
         # --- heartbeat refresh of leaf aggregate slack --------------------------

@@ -79,8 +79,8 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
 
         # --- local commit attempt (per-node lock: one per node per tick) -----
         local_q = (tt.st == C.B_QUEUED) & (tt.shard == LOCAL)
-        tt, free, admit, reject, n_started, hist = C.admit_fifo(
-            cfg, tt, free, local_q, s.t, m.lat_hist
+        tt, free, m, admit, reject = C.admit_fifo(
+            cfg, tt, free, local_q, s.t, m
         )
 
         # capacity miss -> spillback to a GCS shard (hotspot skew)
@@ -90,9 +90,7 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
             st=jnp.where(reject, C.B_QUEUED, tt.st),
         )
         m = m._replace(
-            started=m.started + n_started,
             spillbacks=m.spillbacks + jnp.sum(reject.astype(jnp.int32)),
-            lat_hist=hist,
         )
 
         # --- GCS processing with USL penalty ---------------------------------

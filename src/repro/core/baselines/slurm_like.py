@@ -93,9 +93,7 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
         node = top_nodes[jnp.clip(rank, 0, MAX_PROC - 1)]
         tt = tt._replace(node=jnp.where(sel, node, tt.node))
 
-        tt, free, admit, reject, n_started, hist = C.admit_fifo(
-            cfg, tt, free, sel, s.t, m.lat_hist
-        )
+        tt, free, m, admit, reject = C.admit_fifo(cfg, tt, free, sel, s.t, m)
 
         # losers retry (bounded) at 2 ms backoff, else fail
         can_retry = reject & (tt.retries < bcfg.slurm_retries)
@@ -110,10 +108,8 @@ def make_step(cfg: LaminarConfig, bcfg: BaselineConfig, lam: float):
             retries=jnp.where(can_retry, tt.retries + 1, tt.retries),
         )
         m = m._replace(
-            started=m.started + n_started,
             failed=m.failed + jnp.sum(give_up.astype(jnp.int32)),
             retries=m.retries + jnp.sum(can_retry.astype(jnp.int32)),
-            lat_hist=hist,
         )
         # NO task timeout for Slurm-like (unbounded in-memory queuing concession)
         s = SlurmState(tt, free, carry, s.t + 1, s.key, scen, m)

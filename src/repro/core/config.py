@@ -17,6 +17,23 @@ from repro.workloads.scenario import ScenarioConfig
 
 MS = 1.0  # readability alias: all *_ms fields are in milliseconds
 
+# ---------------------------------------------------------------------------
+# workload classes (tiers): prod / batch / best-effort (§III-H, ROADMAP 1)
+# ---------------------------------------------------------------------------
+# Tier codes order eviction preference: higher code = lower class = evicted
+# first. The survival scan enforces strict tier precedence ahead of the
+# (score, slot) victim key when Airlock is on; kernel-style OOM kills stay
+# tier-blind (that contrast is what Exp8 measures).
+NUM_TIERS = 3
+TIER_NAMES: Tuple[str, ...] = ("prod", "batch", "be")
+
+# Named arrival tier mixes for Exp8 (probabilities over prod/batch/be).
+TIER_MIXES: dict = {
+    "balanced": (0.3, 0.4, 0.3),
+    "prod_heavy": (0.6, 0.3, 0.1),
+    "be_heavy": (0.1, 0.3, 0.6),
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadConfig:
@@ -43,6 +60,11 @@ class WorkloadConfig:
     # Fraction of arrivals that are squatters (Exp4): win arbitration but never
     # complete payload pull. 0.0 disables.
     squatter_ratio: float = 0.0
+
+    # Workload-class (tier) mix over (prod, batch, best-effort) and the
+    # tier multiplier applied to the utility weight ev = prio * mass.
+    tier_probs: Tuple[float, ...] = TIER_MIXES["balanced"]
+    tier_ev_mult: Tuple[float, ...] = (4.0, 1.0, 0.25)
 
     def mean_atom_seconds_per_task(self) -> float:
         """Expected atom-seconds consumed per arriving task (for lambda calc)."""

@@ -45,7 +45,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import LaminarConfig
-from repro.core.state import ADDRESSING, EMPTY, RESERVED, RUNNING, SUSPENDED, SimState
+from repro.core.state import (
+    ADDRESSING,
+    EMPTY,
+    RESERVED,
+    RUNNING,
+    SUSPENDED,
+    SimState,
+    tier_counts,
+)
 from repro.workloads.disruption import disruption_step
 from repro.workloads.scenario import ScenarioConfig
 
@@ -138,8 +146,16 @@ def apply(
             # flying and may still land via its destination reservation
             lost_state = resident | (s.migrating & hit1 & ~resident)
         else:
+            # no Airlock: displaced residents die with the node — the only
+            # disruption path that permanently kills started work
             st = jnp.where(resident, EMPTY, st)
             lost_state = resident
+            m = m._replace(
+                evicted_killed=m.evicted_killed
+                + jnp.sum(resident.astype(jnp.int32)),
+                evicted_killed_tier=m.evicted_killed_tier
+                + tier_counts(s.tier, resident),
+            )
 
         alloc = jnp.where(lost_state[:, None], jnp.uint32(0), alloc)
         alloc_node = jnp.where(lost_state, -1, alloc_node)

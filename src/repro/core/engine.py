@@ -25,12 +25,13 @@ from repro.core import airlock, arbiter, da, disrupt, hotpath, teg, workload, zh
 from repro.core.config import LaminarConfig
 from repro.workloads import schedule as wl_schedule
 from repro.workloads.scenario import ScenarioConfig
+from repro.core.config import TIER_NAMES
 from repro.core.state import (
     EMPTY,
-    HIST_BUCKETS,
+    METRIC_VECTOR_FIELDS,
     Metrics,
     SimState,
-    bucket_upper_ms,
+    hist_quantile,
     init_state,
 )
 
@@ -91,6 +92,7 @@ def _inject_arrivals(
     s = s._replace(
         contig=put(s.contig, batch.contig),
         squat=put(s.squat, batch.squat),
+        tier=put(s.tier, batch.tier),
         migrating=put(s.migrating, jnp.zeros((n_max,), jnp.bool_)),
         mass=put(s.mass, batch.mass),
         ev=put(s.ev, batch.ev),
@@ -356,17 +358,14 @@ def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, 
     # a migrating incarnation anywhere in its secondary-reactivation epoch
     from repro.core.state import SUSPENDED
 
-    resident_end = int(
-        (((st == RUNNING) | (st == SUSPENDED)) | (mig & (st != EMPTY))).sum()
-    )
+    resident_mask = ((st == RUNNING) | (st == SUSPENDED)) | (mig & (st != EMPTY))
+    resident_end = int(resident_mask.sum())
 
     hist = np.asarray(m.lat_hist, np.float64)
     total = hist.sum()
     if total > 0:
-        c = np.cumsum(hist) / total
-        uppers = bucket_upper_ms(np.arange(HIST_BUCKETS))
-        p50 = float(uppers[int(np.searchsorted(c, 0.50))])
-        p99 = float(uppers[int(np.searchsorted(c, 0.99))])
+        p50 = hist_quantile(hist, 0.50)
+        p99 = hist_quantile(hist, 0.99)
     else:
         p50 = p99 = float("nan")
 
@@ -389,8 +388,40 @@ def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, 
     )
 
     out: Dict[str, Any] = {
-        f: int(getattr(m, f)) for f in Metrics._fields if f != "lat_hist"
+        f: int(getattr(m, f))
+        for f in Metrics._fields
+        if f not in METRIC_VECTOR_FIELDS
     }
+
+    # ---- per-tier lifecycle accounting (Exp8) -----------------------------
+    tier = np.asarray(final.tier)
+    from repro.core.config import NUM_TIERS
+
+    resident_tier = np.bincount(
+        tier[resident_mask], minlength=NUM_TIERS
+    )[:NUM_TIERS]
+    for i, nm in enumerate(TIER_NAMES):
+        started_i = int(m.started_tier[i])
+        killed_i = (
+            int(m.oom_kill_tier[i])
+            + int(m.reclaimed_tier[i])
+            + int(m.evicted_killed_tier[i])
+        )
+        th = np.asarray(m.lat_hist_tier[i], np.float64)
+        out[f"{nm}_started"] = started_i
+        out[f"{nm}_completed"] = int(m.completed_tier[i])
+        out[f"{nm}_oom"] = int(m.oom_kill_tier[i])
+        out[f"{nm}_reclaimed"] = int(m.reclaimed_tier[i])
+        out[f"{nm}_evicted_killed"] = int(m.evicted_killed_tier[i])
+        out[f"{nm}_resident_end"] = int(resident_tier[i])
+        out[f"{nm}_survival"] = 1.0 - killed_i / max(started_i, 1)
+        out[f"{nm}_p50_ms"] = (
+            hist_quantile(th, 0.50) if th.sum() > 0 else float("nan")
+        )
+        out[f"{nm}_p99_ms"] = (
+            hist_quantile(th, 0.99) if th.sum() > 0 else float("nan")
+        )
+
     out.update(
         start_success_ratio=float(m.started) / max(arrived - in_flight, 1),
         start_success_raw=float(m.started) / arrived,
@@ -402,8 +433,15 @@ def summarize(cfg: LaminarConfig, final: SimState, ts: np.ndarray) -> Dict[str, 
         resident_end=resident_end,
         completed_success_ratio=float(m.completed)
         / max(arrived - in_flight, 1),
+        # every way a started task dies: kernel OOM, Airlock reclamation, or
+        # an un-airlocked hard node failure (evicted_killed)
         exec_survival_ratio=1.0
-        - (float(m.oom_kill_f + m.oom_kill_l) + float(m.reclaimed)) / started,
+        - (
+            float(m.oom_kill_f + m.oom_kill_l)
+            + float(m.reclaimed)
+            + float(m.evicted_killed)
+        )
+        / started,
         p50_ms=p50,
         p99_ms=p99,
         control_us_per_start=work_ns / started / 1e3,

@@ -136,10 +136,11 @@ def zone_aggregate(
 def survival_scan(cfg: LaminarConfig, s):
     """Fused per-tick survival decision over the probe table (§III-G/H/I).
 
-    Takes the full ``SimState`` (the op consumes eight of its columns) and
+    Takes the full ``SimState`` (the op consumes nine of its columns) and
     returns ``(pressure (N,), victim, resume, react, expire)``. The victim is
-    the per-node extreme — largest memory under kernel OOM, lowest E_v under
-    Airlock — and the transition masks are empty when ``cfg.airlock`` is off.
+    the per-node extreme — largest memory under kernel OOM, lowest E_v within
+    the node's worst workload class under Airlock (strict tier precedence) —
+    and the transition masks are empty when ``cfg.airlock`` is off.
     """
     mc = cfg.memory
     args = (
@@ -147,6 +148,7 @@ def survival_scan(cfg: LaminarConfig, s):
         s.alloc_node,
         s.mem,
         s.ev,
+        s.tier,
         s.migrating,
         s.susp_tick,
         s.surv_deadline,

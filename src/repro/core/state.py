@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap
-from repro.core.config import LaminarConfig
+from repro.core.config import NUM_TIERS, LaminarConfig
 
 # ---------------------------------------------------------------------------
 # probe (DA) state machine codes
@@ -69,21 +69,60 @@ class Metrics(NamedTuple):
     # residents displaced by hard node failures: killed outright without
     # Airlock, forced into secondary re-addressing with it
     evicted: jax.Array
+    # of those, the ones actually killed (non-Airlock hard failures): they
+    # never come back, so they count against execution survival
+    evicted_killed: jax.Array
     # control-work op counters (multiplied by ns constants at summary time)
     op_dispatch: jax.Array
     op_eval: jax.Array
     op_bounce: jax.Array
     op_arb: jax.Array
-    # arrival->start latency histogram (log buckets)
+    # per-tier lifecycle counters, (NUM_TIERS,) each
+    started_tier: jax.Array
+    completed_tier: jax.Array
+    oom_kill_tier: jax.Array
+    reclaimed_tier: jax.Array
+    evicted_killed_tier: jax.Array
+    # arrival->start latency histograms (log buckets): global + per-tier
     lat_hist: jax.Array
+    lat_hist_tier: jax.Array  # (NUM_TIERS, HIST_BUCKETS)
 
     @staticmethod
     def zeros(hist_buckets: int = 64) -> "Metrics":
         z = jnp.zeros((), jnp.int32)
-        n_scalars = len(Metrics._fields) - 1
-        return Metrics(
-            *([z] * n_scalars), lat_hist=jnp.zeros((hist_buckets,), jnp.int32)
+        zt = jnp.zeros((NUM_TIERS,), jnp.int32)
+        vec = dict(
+            started_tier=zt,
+            completed_tier=zt,
+            oom_kill_tier=zt,
+            reclaimed_tier=zt,
+            evicted_killed_tier=zt,
+            lat_hist=jnp.zeros((hist_buckets,), jnp.int32),
+            lat_hist_tier=jnp.zeros((NUM_TIERS, hist_buckets), jnp.int32),
         )
+        scalars = [f for f in Metrics._fields if f not in vec]
+        return Metrics(**{f: z for f in scalars}, **vec)
+
+
+# Metrics fields that are arrays rather than scalar counters (summarize
+# reports them per-tier instead of folding them into the flat int dict).
+METRIC_VECTOR_FIELDS = (
+    "started_tier",
+    "completed_tier",
+    "oom_kill_tier",
+    "reclaimed_tier",
+    "evicted_killed_tier",
+    "lat_hist",
+    "lat_hist_tier",
+)
+
+
+def tier_counts(tier: jax.Array, mask: jax.Array) -> jax.Array:
+    """Count masked probes per tier -> (NUM_TIERS,) i32 scatter-add."""
+    tgt = jnp.where(mask, tier, NUM_TIERS)
+    return jnp.zeros((NUM_TIERS,), jnp.int32).at[tgt].add(
+        mask.astype(jnp.int32), mode="drop"
+    )
 
 
 HIST_BUCKETS = 64
@@ -100,6 +139,35 @@ def bucket_upper_ms(i: np.ndarray) -> np.ndarray:
     return HIST_MIN_MS * 2.0 ** ((i + 1) / HIST_PER_OCTAVE)
 
 
+def bucket_lower_ms(i: np.ndarray) -> np.ndarray:
+    return HIST_MIN_MS * 2.0 ** (np.asarray(i) / HIST_PER_OCTAVE)
+
+
+def hist_quantile(hist: np.ndarray, q: float) -> float:
+    """Quantile of a log-bucketed latency histogram (host-side, np).
+
+    Linearly interpolates within the containing bucket instead of snapping to
+    its upper edge; shared by ``engine.summarize`` and the baselines so the
+    two report paths cannot drift. Returns 0.0 for an empty histogram.
+    """
+    hist = np.asarray(hist, np.float64)
+    total = hist.sum()
+    if total <= 0:
+        return 0.0
+    cum = np.cumsum(hist)
+    target = q * total
+    i = int(np.searchsorted(cum, target))
+    i = min(i, len(hist) - 1)
+    in_bucket = hist[i]
+    before = cum[i] - in_bucket
+    # bucket 0's nominal lower edge is HIST_MIN_MS, but sub-minimum latencies
+    # clip into it, so its interpolation floor is 0
+    lo = 0.0 if i == 0 else float(bucket_lower_ms(i))
+    hi = float(bucket_upper_ms(np.asarray(i)))
+    frac = (target - before) / in_bucket if in_bucket > 0 else 1.0
+    return lo + float(np.clip(frac, 0.0, 1.0)) * (hi - lo)
+
+
 class SimState(NamedTuple):
     t: jax.Array  # current tick (i32)
     key: jax.Array  # PRNG key
@@ -111,6 +179,7 @@ class SimState(NamedTuple):
     node: jax.Array  # current / target node
     contig: jax.Array  # L-task (strictly contiguous demand)
     squat: jax.Array  # squatter (never completes payload pull)
+    tier: jax.Array  # workload class: 0 prod / 1 batch / 2 best-effort (i32)
     migrating: jax.Array  # DA in secondary-reactivation epoch
     mass: jax.Array  # atoms demanded (i32)
     ev: jax.Array  # E_v,init static routing weight (f32)
@@ -304,6 +373,7 @@ def init_state(cfg: LaminarConfig, seed: int = 0) -> SimState:
         node=jnp.full((P,), -1, jnp.int32),
         contig=zero_p_b,
         squat=zero_p_b,
+        tier=zero_p_i,
         migrating=zero_p_b,
         mass=zero_p_i,
         ev=zero_p_f,

@@ -22,8 +22,9 @@ class ArrivalBatch(NamedTuple):
     n: jax.Array  # number of real arrivals this tick (<= n_max)
     contig: jax.Array  # L-task flag
     squat: jax.Array
+    tier: jax.Array  # workload class: 0 prod / 1 batch / 2 best-effort
     mass: jax.Array
-    ev: jax.Array  # E_v,init = p_i * m_i  (energy contract)
+    ev: jax.Array  # E_v,init = p_i * m_i * tier_mult  (energy contract)
     patience: jax.Array  # E_patience(0) = E_i(0)
     service: jax.Array  # service duration in ticks
     pull: jax.Array  # payload pull duration in ticks
@@ -41,13 +42,18 @@ def sample_arrivals(
 ) -> ArrivalBatch:
     w = cfg.workload
     n_max = cfg.max_arrivals_per_tick
-    ks = jax.random.split(key, 10)
+    ks = jax.random.split(key, 11)
     n = jnp.minimum(
         jax.random.poisson(ks[0], lam_per_tick), n_max
     ).astype(jnp.int32)
 
     is_l = jax.random.uniform(ks[1], (n_max,)) >= w.f_share
     squat = jax.random.uniform(ks[2], (n_max,)) < w.squatter_ratio
+
+    tp = jnp.asarray(w.tier_probs, jnp.float32)
+    tier = jax.random.choice(
+        ks[10], len(w.tier_probs), shape=(n_max,), p=tp / tp.sum()
+    ).astype(jnp.int32)
 
     mass_f = _choice(ks[3], w.f_masses, w.f_mass_probs, (n_max,))
     mass_l = _choice(ks[4], w.l_masses, w.l_mass_probs, (n_max,))
@@ -57,7 +63,14 @@ def sample_arrivals(
     pri_l = _choice(ks[6], w.l_priorities, w.l_priority_probs, (n_max,))
     prio = jnp.where(is_l, pri_l, pri_f)
 
-    ev = prio * mass.astype(jnp.float32)  # E_i(0) = p_i * m_i
+    # E_i(0) = p_i * m_i, scaled by the workload-class multiplier so tier
+    # drives both arbitration utility and the Airlock victim score (-ev).
+    # The search-patience budget stays at the UNSCALED base energy: tier
+    # decides who wins contested resources and who is evicted first, not
+    # how long a probe may keep addressing before Fast-Fail.
+    base_energy = prio * mass.astype(jnp.float32)
+    tier_mult = jnp.asarray(w.tier_ev_mult, jnp.float32)[tier]
+    ev = base_energy * tier_mult
 
     # F: exponential service; L: lognormal (heavier tail).
     u = jax.random.exponential(ks[7], (n_max,))
@@ -75,9 +88,10 @@ def sample_arrivals(
         n=n,
         contig=is_l,
         squat=squat,
+        tier=tier,
         mass=mass,
         ev=ev,
-        patience=ev,
+        patience=base_energy,
         service=service,
         pull=pull,
     )

@@ -11,15 +11,19 @@ of separate segment-scatter, argmax and mask sweeps:
   * the resume / reactivate / expire transition masks on the post-victim view.
 
 Layout: the probe table is tiled into ``BLOCK_P`` slabs on the sublane axis;
-the node-level accumulators (pressure, best score, best slot) are small
-(N <= a few thousand) and live as whole-array VMEM blocks with a constant
-index map, so they persist across the entire grid. The grid is
-``(4, P/BLOCK_P)``: three reduction phases that revisit every probe slab
-(pressure, best score, best slot — the lexicographic stages cannot collapse,
-the slot max is only meaningful against the *final* score max) and one
-elementwise phase that emits the probe masks. Scatter accumulation runs in
-probe-slot order, so the blocked kernel reproduces the reference scatter-add
-float-for-float; the max stages are exact regardless of blocking.
+the node-level accumulators (pressure, worst tier, best score, best slot) are
+small (N <= a few thousand) and live as whole-array VMEM blocks with a
+constant index map, so they persist across the entire grid. The grid is
+``(5, P/BLOCK_P)``: four reduction phases that revisit every probe slab
+(pressure, worst candidate tier, best score, best slot — the lexicographic
+stages cannot collapse, each max is only meaningful against the *final*
+value of the previous stage) and one elementwise phase that emits the probe
+masks. The tier stage enforces strict workload-class precedence under
+Airlock (candidates narrow to each node's worst resident class before the
+(score, slot) key applies); under kernel OOM it is a no-op pass. Scatter
+accumulation runs in probe-slot order, so the blocked kernel reproduces the
+reference scatter-add float-for-float; the max stages are exact regardless
+of blocking.
 """
 
 from __future__ import annotations
@@ -41,11 +45,13 @@ def _scan_kernel(
     node_ref,
     mem_ref,
     ev_ref,
+    tier_ref,
     mig_ref,
     stick_ref,
     sdl_ref,
     base_ref,
     press_ref,
+    btier_ref,
     bsc_ref,
     bslot_ref,
     victim_ref,
@@ -87,13 +93,34 @@ def _scan_kernel(
         )
         press_ref[...] = press_ref[...].at[tgt].add(mem_eff, mode="drop")
 
-    def candidate_score():
+    def pre_candidates():
         over = press_ref[...][node_c] > watermark
-        cand = resident & over & valid
+        return resident & over & valid
+
+    @pl.when(ph == 1)
+    def _worst_tier():
+        # strict tier precedence (Airlock): worst resident class per node.
+        # Kernel OOM is tier-blind; the stage still runs (uniform grid) but
+        # its accumulator is ignored by candidate_score below.
+        @pl.when(j == 0)
+        def _():
+            btier_ref[...] = jnp.full((N,), -1, jnp.int32)
+
+        cand = pre_candidates()
+        btier_ref[...] = (
+            btier_ref[...]
+            .at[tgt]
+            .max(jnp.where(cand, tier_ref[...], -1), mode="drop")
+        )
+
+    def candidate_score():
+        cand = pre_candidates()
+        if airlock:
+            cand = cand & (tier_ref[...] == btier_ref[...][node_c])
         score = -ev_ref[...] if airlock else mem_ref[...]
         return cand, jnp.where(cand, score, -jnp.inf)
 
-    @pl.when(ph == 1)
+    @pl.when(ph == 2)
     def _best_score():
         @pl.when(j == 0)
         def _():
@@ -109,7 +136,7 @@ def _scan_kernel(
     def slots():
         return j * BLOCK_P + jnp.arange(BLOCK_P, dtype=jnp.int32)
 
-    @pl.when(ph == 2)
+    @pl.when(ph == 3)
     def _best_slot():
         @pl.when(j == 0)
         def _():
@@ -122,7 +149,7 @@ def _scan_kernel(
             .max(jnp.where(top, slots(), -1), mode="drop")
         )
 
-    @pl.when(ph == 3)
+    @pl.when(ph == 4)
     def _masks():
         top = toppers()
         victim = top & (slots() == bslot_ref[...][node_c])
@@ -168,6 +195,7 @@ def survival_scan_pallas(
     alloc_node: jax.Array,  # (P,) i32
     mem: jax.Array,  # (P,) f32
     ev: jax.Array,  # (P,) f32
+    tier: jax.Array,  # (P,) i32 workload class
     migrating: jax.Array,  # (P,) bool
     susp_tick: jax.Array,  # (P,) i32
     surv_deadline: jax.Array,  # (P,) i32
@@ -191,6 +219,7 @@ def survival_scan_pallas(
         alloc_node = jnp.pad(alloc_node, (0, pad), constant_values=-1)
         mem = jnp.pad(mem, (0, pad))
         ev = jnp.pad(ev, (0, pad))
+        tier = jnp.pad(tier, (0, pad))
         migrating = jnp.pad(migrating.astype(jnp.int32), (0, pad))
         susp_tick = jnp.pad(susp_tick, (0, pad))
         surv_deadline = jnp.pad(surv_deadline, (0, pad))
@@ -209,15 +238,16 @@ def survival_scan_pallas(
         t_susp=t_susp,
         t_surv=t_surv,
     )
-    pressure, _, _, victim, resume, react, expire = pl.pallas_call(
+    pressure, _, _, _, victim, resume, react, expire = pl.pallas_call(
         kernel,
-        grid=(4, Pp // BLOCK_P),
+        grid=(5, Pp // BLOCK_P),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),  # t
             probe_spec,  # st
             probe_spec,  # alloc_node
             probe_spec,  # mem
             probe_spec,  # ev
+            probe_spec,  # tier
             probe_spec,  # migrating
             probe_spec,  # susp_tick
             probe_spec,  # surv_deadline
@@ -225,8 +255,9 @@ def survival_scan_pallas(
         ],
         out_specs=[
             node_spec,  # pressure (accumulated across phase 0)
-            node_spec,  # best score (phase 1)
-            node_spec,  # best slot (phase 2)
+            node_spec,  # worst candidate tier (phase 1)
+            node_spec,  # best score (phase 2)
+            node_spec,  # best slot (phase 3)
             probe_spec,  # victim
             probe_spec,  # resume
             probe_spec,  # react
@@ -234,6 +265,7 @@ def survival_scan_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
             jax.ShapeDtypeStruct((N,), jnp.float32),
             jax.ShapeDtypeStruct((N,), jnp.int32),
             jax.ShapeDtypeStruct((Pp,), jnp.int32),
@@ -248,6 +280,7 @@ def survival_scan_pallas(
         alloc_node.astype(jnp.int32),
         mem.astype(jnp.float32),
         ev.astype(jnp.float32),
+        tier.astype(jnp.int32),
         migrating.astype(jnp.int32),
         susp_tick.astype(jnp.int32),
         surv_deadline.astype(jnp.int32),

@@ -15,6 +15,7 @@ def survival_scan(
     alloc_node,
     mem,
     ev,
+    tier,
     migrating,
     susp_tick,
     surv_deadline,
@@ -45,6 +46,7 @@ def survival_scan(
         alloc_node,
         mem,
         ev,
+        tier,
         migrating,
         susp_tick,
         surv_deadline,

@@ -8,10 +8,12 @@ operation structure:
 
   * pressure: one ``scatter-add`` of effective memory onto ``base``
     (rigid + ambient), in probe-slot order;
-  * victim: lexicographic per-node argmax of ``(score, slot)`` via two exact
-    scatter-max passes — float max is associative, so blocking cannot change
-    the result, and the integer slot stage makes ties exact (no float
-    composite key);
+  * victim: lexicographic per-node argmax of ``(tier, score, slot)`` — an
+    integer scatter-max restricting candidates to each node's worst resident
+    workload class (Airlock only; kernel OOM stays tier-blind), then two
+    exact scatter-max passes over ``(score, slot)`` — float max is
+    associative, so blocking cannot change the result, and the integer
+    stages make ties exact (no float composite key);
   * transition masks: elementwise on the post-victim view of the table.
 
 State-machine codes are passed in by the caller (``hotpath``) rather than
@@ -38,6 +40,7 @@ def survival_scan_ref(
     alloc_node: jax.Array,  # (P,) i32 node holding the primary allocation (-1 none)
     mem: jax.Array,  # (P,) f32 true physical memory while resident
     ev: jax.Array,  # (P,) f32 static routing weight E_v,init
+    tier: jax.Array,  # (P,) i32 workload class (0 prod .. 2 best-effort)
     migrating: jax.Array,  # (P,) bool secondary-reactivation epoch
     susp_tick: jax.Array,  # (P,) i32 tick at which suspension began
     surv_deadline: jax.Array,  # (P,) i32 shared survival TTL expiry tick
@@ -73,9 +76,20 @@ def survival_scan_ref(
     pressure = base.astype(jnp.float32).at[tgt].add(mem_eff, mode="drop")
 
     # per-node extreme victim: max memory (kernel OOM) / min E_v (Airlock),
-    # lexicographic (score, slot) so equal scores still elect exactly one
+    # lexicographic (tier, score, slot) so equal scores still elect exactly one
     over = pressure[node_c] > jnp.float32(watermark)
     cand = resident & over & valid
+    if airlock:
+        # strict tier precedence (§III-H): only each node's worst-class
+        # (highest tier code) candidates stay eligible; prod is never chosen
+        # while a batch/best-effort resident is available. Kernel OOM is
+        # deliberately tier-blind — that contrast is what Exp8 measures.
+        btier = (
+            jnp.full((N,), -1, jnp.int32)
+            .at[tgt]
+            .max(jnp.where(cand, tier, -1), mode="drop")
+        )
+        cand = cand & (tier == btier[node_c])
     score = -ev if airlock else mem
     sc = jnp.where(cand, score, -jnp.inf)
     best = jnp.full((N,), -jnp.inf, jnp.float32).at[tgt].max(sc, mode="drop")

@@ -273,3 +273,57 @@ def test_finding_json_roundtrip():
     j = f.to_json()
     assert j["rule"] == "LC101" and j["file"] == "a.py" and j["line"] == 3
     assert "a.py:3" in str(f)
+
+
+# ---------------------------------------------------------------------------
+# repo hygiene: no orphaned bench artifacts
+# ---------------------------------------------------------------------------
+
+
+def _registered_emit_names() -> set:
+    """Emit names reachable from ``benchmarks.run.BENCHES``, via ast (no jax).
+
+    BENCHES values are ``bench_module.run`` attributes; each module's
+    ``emit("<name>", ...)`` first argument is the persisted JSON stem.
+    """
+    import ast as _ast
+
+    run_tree = _ast.parse((ROOT / "benchmarks" / "run.py").read_text())
+    modules = set()
+    for node in _ast.walk(run_tree):
+        if isinstance(node, _ast.Dict):
+            for v in node.values:
+                if isinstance(v, _ast.Attribute) and isinstance(
+                    v.value, _ast.Name
+                ):
+                    modules.add(v.value.id)
+    assert modules, "BENCHES registry not found in benchmarks/run.py"
+    names = set()
+    for mod in modules:
+        tree = _ast.parse((ROOT / "benchmarks" / f"{mod}.py").read_text())
+        for node in _ast.walk(tree):
+            if (
+                isinstance(node, _ast.Call)
+                and isinstance(node.func, _ast.Name)
+                and node.func.id == "emit"
+                and node.args
+                and isinstance(node.args[0], _ast.Constant)
+                and isinstance(node.args[0].value, str)
+            ):
+                names.add(node.args[0].value)
+    return names
+
+
+def test_no_orphaned_bench_artifacts():
+    """Every persisted ``results/bench/*.json`` must have a generating
+    benchmark registered in ``benchmarks/run.py`` — a stale artifact that no
+    code can reproduce silently poisons EXPERIMENTS.md (this is exactly how
+    ``exp8_tiers.json`` went orphaned)."""
+    results = ROOT / "results" / "bench"
+    stems = {p.stem for p in results.glob("*.json")}
+    assert stems, "no persisted bench artifacts — gate is vacuous"
+    registered = _registered_emit_names()
+    orphans = sorted(stems - registered)
+    assert not orphans, (
+        f"orphaned bench artifacts (no registered generator): {orphans}"
+    )

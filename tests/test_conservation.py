@@ -9,11 +9,13 @@ a task and every per-metric golden would still pass. Two nets:
          started == completed + oom_kill_f + oom_kill_l + reclaimed
                     + evicted_killed + resident_end
 
-     where ``evicted_killed`` is ``evicted`` in kernel-OOM mode (hard node
-     failure destroys residents outright) and 0 under Airlock (an evicted
-     resident survives as a migrating glass-state incarnation, so it is
-     either still resident at the horizon or was reclaimed — both already
-     on the right-hand side). Checked for EVERY scenario preset.
+     where ``evicted_killed`` is the engine's own counter of residents
+     destroyed outright by a node failure (kernel-OOM mode only; under
+     Airlock an evicted resident survives as a migrating glass-state
+     incarnation, so the counter stays 0 and the task is either still
+     resident at the horizon or was reclaimed — both already on the
+     right-hand side). Checked for EVERY scenario preset, and per tier:
+     the same identity must hold within each workload class.
 
   2. down-node exclusion — a node that advertises zero capacity never
      holds a *new* allocation: under hard failure no probe ever holds atoms
@@ -51,24 +53,57 @@ CFG = LaminarConfig(
 
 
 def check_conservation(out: dict, airlock: bool):
-    evicted_killed = 0 if airlock else out["evicted"]
+    if airlock:
+        # Airlock never destroys a resident outright: eviction demotes to a
+        # migrating glass-state incarnation instead of killing
+        assert out["evicted_killed"] == 0
     accounted = (
         out["completed"]
         + out["oom_kill_f"]
         + out["oom_kill_l"]
         + out["reclaimed"]
-        + evicted_killed
+        + out["evicted_killed"]
         + out["resident_end"]
     )
     assert out["started"] == accounted, (
         f"started={out['started']} != completed={out['completed']} "
         f"+ oom={out['oom_kill_f'] + out['oom_kill_l']} "
-        f"+ reclaimed={out['reclaimed']} + evicted_killed={evicted_killed} "
+        f"+ reclaimed={out['reclaimed']} "
+        f"+ evicted_killed={out['evicted_killed']} "
         f"+ resident_end={out['resident_end']}"
     )
     # arrivals can only ever exceed starts (probes drop pre-start, never
     # double-start), and the drop/in-flight split covers the difference
     assert out["arrived"] >= out["started"]
+    check_tier_conservation(out)
+
+
+def check_tier_conservation(out: dict):
+    """The task-conservation identity must hold inside each workload class,
+    and the per-tier rows must sum back to the cluster-wide counters."""
+    from repro.core.config import TIER_NAMES
+
+    for col, total in (
+        ("started", out["started"]),
+        ("completed", out["completed"]),
+        ("oom", out["oom_kill_f"] + out["oom_kill_l"]),
+        ("reclaimed", out["reclaimed"]),
+        ("evicted_killed", out["evicted_killed"]),
+        ("resident_end", out["resident_end"]),
+    ):
+        tier_sum = sum(out[f"{nm}_{col}"] for nm in TIER_NAMES)
+        assert tier_sum == total, f"{col}: sum(tiers)={tier_sum} != {total}"
+    for nm in TIER_NAMES:
+        accounted = (
+            out[f"{nm}_completed"]
+            + out[f"{nm}_oom"]
+            + out[f"{nm}_reclaimed"]
+            + out[f"{nm}_evicted_killed"]
+            + out[f"{nm}_resident_end"]
+        )
+        assert out[f"{nm}_started"] == accounted, (
+            f"tier {nm}: started={out[f'{nm}_started']} != {accounted}"
+        )
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
@@ -90,6 +125,28 @@ def test_conservation_kernel_oom(name):
     if name in ("churn", "storm"):
         assert out["evicted"] > 0
     check_conservation(out, airlock=False)
+
+
+def test_exec_survival_counts_disruption_deaths():
+    """Regression: ``exec_survival_ratio`` used to omit residents destroyed
+    by hard node failure (the ``evicted_killed`` bucket), overstating
+    kernel-OOM survival in every disruption scenario. Pin the full
+    numerator under the storm preset, where disruption deaths are plentiful.
+    """
+    cfg = dataclasses.replace(CFG, airlock=False, scenario=SCENARIOS["storm"])
+    out = LaminarEngine(cfg).run(seed=0)
+    assert out["evicted_killed"] > 0  # storm actually kills residents
+    killed = (
+        out["oom_kill_f"]
+        + out["oom_kill_l"]
+        + out["reclaimed"]
+        + out["evicted_killed"]
+    )
+    want = 1.0 - killed / out["started"]
+    assert out["exec_survival_ratio"] == pytest.approx(want, abs=1e-12)
+    # and the old (buggy) formula would have claimed strictly higher survival
+    stale = 1.0 - (killed - out["evicted_killed"]) / out["started"]
+    assert out["exec_survival_ratio"] < stale
 
 
 # ---------------------------------------------------------------------------

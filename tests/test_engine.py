@@ -8,7 +8,9 @@ survival, two-phase squatter recovery, regeneration under loss.
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import LaminarConfig, LaminarEngine, MemoryConfig
 from repro.core import bitmap
@@ -158,3 +160,96 @@ class TestControlWork:
         hi = LaminarEngine(dataclasses.replace(BASE, rho=0.9)).run(seed=0)
         assert lo["control_us_per_start"] < 1.0
         assert hi["control_us_per_start"] < 5 * lo["control_us_per_start"]
+
+
+class TestHistQuantile:
+    """Pin the shared log-bucket quantile helper on known distributions.
+
+    Regression: engine.summarize and baselines/common.py each carried a
+    copy-pasted quantile that snapped p50/p99 to the containing bucket's
+    UPPER edge (exp8 rows reported exactly 256.0 ms for three different
+    tiers). One helper, linear interpolation within the bucket."""
+
+    def test_single_shared_implementation(self):
+        # the drift gate itself: all three report paths must resolve to the
+        # SAME function object
+        from repro.core import engine, state
+        from repro.core.baselines import common
+
+        assert engine.hist_quantile is state.hist_quantile
+        assert common.hist_quantile is state.hist_quantile
+
+    def test_uniform_mass_single_bucket_interpolates(self):
+        from repro.core.state import (
+            HIST_BUCKETS,
+            bucket_lower_ms,
+            bucket_upper_ms,
+            hist_quantile,
+        )
+
+        hist = np.zeros(HIST_BUCKETS)
+        hist[10] = 1000
+        lo, hi = float(bucket_lower_ms(10)), float(bucket_upper_ms(10))
+        for q in (0.25, 0.50, 0.99):
+            got = hist_quantile(hist, q)
+            assert got == pytest.approx(lo + q * (hi - lo))
+            assert lo < got < hi  # never snapped to an edge
+
+    def test_bucket_zero_floor_is_zero(self):
+        # sub-minimum latencies clip into bucket 0, so its interpolation
+        # floor is 0.0 (not HIST_MIN_MS)
+        from repro.core.state import HIST_BUCKETS, bucket_upper_ms, hist_quantile
+
+        hist = np.zeros(HIST_BUCKETS)
+        hist[0] = 100
+        assert hist_quantile(hist, 0.5) == pytest.approx(
+            0.5 * float(bucket_upper_ms(0))
+        )
+
+    def test_two_point_mass_p50_p99(self):
+        from repro.core.state import (
+            HIST_BUCKETS,
+            bucket_lower_ms,
+            bucket_upper_ms,
+            hist_quantile,
+        )
+
+        hist = np.zeros(HIST_BUCKETS)
+        hist[4], hist[20] = 100, 100
+        # p50 lands exactly on bucket 4's full mass -> its upper edge
+        assert hist_quantile(hist, 0.50) == pytest.approx(
+            float(bucket_upper_ms(4))
+        )
+        # p99 sits 98/100 of the way through bucket 20
+        lo, hi = float(bucket_lower_ms(20)), float(bucket_upper_ms(20))
+        assert hist_quantile(hist, 0.99) == pytest.approx(lo + 0.98 * (hi - lo))
+
+    def test_tracks_true_sample_quantile_within_bucket_width(self):
+        from repro.core.state import (
+            HIST_BUCKETS,
+            bucket_lower_ms,
+            bucket_upper_ms,
+            hist_quantile,
+            latency_bucket,
+        )
+
+        rng = np.random.default_rng(7)
+        lat = rng.lognormal(mean=2.0, sigma=0.8, size=20_000)  # ms
+        b = np.asarray(latency_bucket(jnp.asarray(lat, jnp.float32)))
+        hist = np.bincount(b, minlength=HIST_BUCKETS)
+        for q in (0.50, 0.90, 0.99):
+            got = hist_quantile(hist, q)
+            true = float(np.quantile(lat, q))
+            i = int(np.asarray(latency_bucket(jnp.float32(true))))
+            width = float(bucket_upper_ms(i)) - float(bucket_lower_ms(i))
+            assert abs(got - true) <= width
+
+    def test_empty_and_monotone(self):
+        from repro.core.state import HIST_BUCKETS, hist_quantile
+
+        assert hist_quantile(np.zeros(HIST_BUCKETS), 0.99) == 0.0
+        rng = np.random.default_rng(0)
+        hist = rng.integers(0, 50, HIST_BUCKETS)
+        qs = np.linspace(0.01, 0.99, 25)
+        vals = [hist_quantile(hist, q) for q in qs]
+        assert all(a <= b for a, b in zip(vals, vals[1:]))

@@ -50,6 +50,7 @@ def _survival_inputs(seed: int, P: int = 777, N: int = 33):
         ),
         mem=jnp.asarray(rng.uniform(0, 0.4, P).astype(np.float32)),
         ev=jnp.asarray(rng.choice([24.0, 48.0, 64.0, 128.0], P).astype(np.float32)),
+        tier=jnp.asarray(rng.integers(0, 3, P).astype(np.int32)),
         migrating=jnp.asarray(rng.uniform(size=P) < 0.2),
         susp_tick=jnp.asarray(rng.integers(0, 50, P).astype(np.int32)),
         surv_deadline=jnp.asarray(rng.integers(0, 120, P).astype(np.int32)),
@@ -173,6 +174,7 @@ def test_hotpath_survival_scan_dispatch(airlock):
         ),
         mem=jnp.asarray((occupied * rng.uniform(0, 0.2, P)).astype(np.float32)),
         ev=jnp.asarray(rng.choice([24.0, 48.0, 256.0], P).astype(np.float32)),
+        tier=jnp.asarray(rng.integers(0, 3, P).astype(np.int32)),
         migrating=jnp.asarray((st == SUSPENDED) & (rng.uniform(size=P) < 0.3)),
         susp_tick=jnp.asarray(rng.integers(0, 300, P).astype(np.int32)),
         surv_deadline=jnp.asarray(rng.integers(100, 500, P).astype(np.int32)),

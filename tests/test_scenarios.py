@@ -69,6 +69,7 @@ def check_rows_beyond_n_inert(seed: int, lam: float):
         contig=jnp.where(beyond, True, batch.contig),
         squat=jnp.where(beyond, True, batch.squat),
         mass=jnp.where(beyond, 63, batch.mass),
+        tier=jnp.where(beyond, 2, batch.tier),
         ev=jnp.where(beyond, 1e6, batch.ev),
         patience=jnp.where(beyond, 1e6, batch.patience),
         service=jnp.where(beyond, 9999, batch.service),
@@ -363,12 +364,12 @@ GOLD_FIELDS = (
 
 # exact integer metrics at seed 0 — regenerate with `python scripts/regen_goldens.py`
 GOLDEN = {
-    'bursty': {'arrived': 3663, 'started': 3609, 'completed': 3198, 'fastfail': 0, 'timeout': 0, 'suspended_cnt': 3228, 'resumed_insitu': 3047, 'reactivated': 11, 'migrated': 7, 'reclaimed': 0, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
-    'churn': {'arrived': 4900, 'started': 4017, 'completed': 3473, 'fastfail': 413, 'timeout': 0, 'suspended_cnt': 5274, 'resumed_insitu': 4895, 'reactivated': 87, 'migrated': 227, 'reclaimed': 7, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 206},
-    'diurnal': {'arrived': 5995, 'started': 5358, 'completed': 4746, 'fastfail': 232, 'timeout': 0, 'suspended_cnt': 7780, 'resumed_insitu': 7358, 'reactivated': 105, 'migrated': 83, 'reclaimed': 3, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
-    'flash': {'arrived': 6259, 'started': 5643, 'completed': 5053, 'fastfail': 182, 'timeout': 0, 'suspended_cnt': 8312, 'resumed_insitu': 7906, 'reactivated': 118, 'migrated': 98, 'reclaimed': 1, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
-    'stationary': {'arrived': 5793, 'started': 5232, 'completed': 4619, 'fastfail': 154, 'timeout': 0, 'suspended_cnt': 7541, 'resumed_insitu': 7089, 'reactivated': 107, 'migrated': 84, 'reclaimed': 1, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
-    'storm': {'arrived': 3613, 'started': 3231, 'completed': 2878, 'fastfail': 288, 'timeout': 0, 'suspended_cnt': 3117, 'resumed_insitu': 2910, 'reactivated': 33, 'migrated': 159, 'reclaimed': 2, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 133},
+    'bursty': {'arrived': 3632, 'started': 3581, 'completed': 3272, 'fastfail': 1, 'timeout': 0, 'suspended_cnt': 2168, 'resumed_insitu': 2061, 'reactivated': 8, 'migrated': 8, 'reclaimed': 0, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'churn': {'arrived': 5188, 'started': 4249, 'completed': 3730, 'fastfail': 446, 'timeout': 0, 'suspended_cnt': 4804, 'resumed_insitu': 4424, 'reactivated': 92, 'migrated': 241, 'reclaimed': 24, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 236},
+    'diurnal': {'arrived': 6448, 'started': 5895, 'completed': 5305, 'fastfail': 132, 'timeout': 0, 'suspended_cnt': 7295, 'resumed_insitu': 6913, 'reactivated': 101, 'migrated': 66, 'reclaimed': 2, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'flash': {'arrived': 6888, 'started': 6311, 'completed': 5720, 'fastfail': 156, 'timeout': 0, 'suspended_cnt': 8144, 'resumed_insitu': 7766, 'reactivated': 107, 'migrated': 84, 'reclaimed': 6, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'stationary': {'arrived': 6455, 'started': 5933, 'completed': 5341, 'fastfail': 98, 'timeout': 0, 'suspended_cnt': 6821, 'resumed_insitu': 6516, 'reactivated': 76, 'migrated': 57, 'reclaimed': 0, 'node_failures': 0, 'node_recoveries': 0, 'evicted': 0},
+    'storm': {'arrived': 3677, 'started': 3253, 'completed': 2874, 'fastfail': 340, 'timeout': 0, 'suspended_cnt': 3326, 'resumed_insitu': 3130, 'reactivated': 44, 'migrated': 141, 'reclaimed': 7, 'node_failures': 38, 'node_recoveries': 26, 'evicted': 127},
 }
 
 
@@ -416,9 +417,9 @@ BASE_GOLD_FIELDS = ("arrived", "started", "completed", "failed", "timeout", "dro
 
 # exact integer metrics at seed 0 — regenerate with `python scripts/regen_goldens.py`
 BASELINE_GOLDEN = {
-    'slurm': {'arrived': 5475, 'started': 5475, 'completed': 5054, 'failed': 131, 'timeout': 0, 'dropped': 0},
-    'ray': {'arrived': 5379, 'started': 5378, 'completed': 4984, 'failed': 51, 'timeout': 0, 'dropped': 0},
-    'flux': {'arrived': 5575, 'started': 5318, 'completed': 4787, 'failed': 246, 'timeout': 0, 'dropped': 0},
+    'flux': {'arrived': 5449, 'started': 5212, 'completed': 4675, 'failed': 226, 'timeout': 0, 'dropped': 0},
+    'ray': {'arrived': 5488, 'started': 5485, 'completed': 5061, 'failed': 48, 'timeout': 0, 'dropped': 0},
+    'slurm': {'arrived': 5372, 'started': 5372, 'completed': 4909, 'failed': 133, 'timeout': 0, 'dropped': 0},
 }
 
 

@@ -20,15 +20,21 @@ from repro.kernels.survival_scan import ref as surv_ref_mod
 KW = dict(airlock=True, residual=0.3, watermark=0.9, safe=0.8, t_susp=80, t_surv=240)
 
 
-def _scan_both(st, node, mem, ev, N, *, airlock=True, **over):
+def _scan_both(st, node, mem, ev, N, *, airlock=True, tier=None, **over):
     """Run ref + interpret kernel on minimal columns; assert they agree."""
     P = len(st)
     kw = {**KW, "airlock": airlock, **over}
+    tier_arr = (
+        jnp.zeros((P,), jnp.int32)
+        if tier is None
+        else jnp.asarray(tier, jnp.int32)
+    )
     args = (
         jnp.asarray(st, jnp.int32),
         jnp.asarray(node, jnp.int32),
         jnp.asarray(mem, jnp.float32),
         jnp.asarray(ev, jnp.float32),
+        tier_arr,
         jnp.zeros((P,), jnp.bool_),
         jnp.zeros((P,), jnp.int32),
         jnp.full((P,), 1 << 24, jnp.int32),
@@ -133,3 +139,80 @@ def test_slot_precision_beyond_float24():
     ev = np.full(P, 512.0)
     _, victim, *_ = _scan_both(st, node, np.full(P, 0.01), ev, 1)
     assert victim.sum() == 1 and victim[P - 1]  # exact max slot, last row
+
+
+# ---------------------------------------------------------------------------
+# strict tier precedence (Airlock): prod / batch / best-effort
+# ---------------------------------------------------------------------------
+
+
+def test_tier_precedence_best_effort_before_prod():
+    """Pinned twins: at equal pressure a best-effort resident is ALWAYS the
+    victim ahead of any prod resident — even when prod has the lower E_v
+    (the tier key ranks before the score key)."""
+    R = core_state.RUNNING
+    # node 0: prod (ev 1.0, would win on score alone) vs best-effort (ev 999)
+    # node 1: prod vs batch — batch must be chosen
+    st = [R, R, R, R]
+    node = [0, 0, 1, 1]
+    ev = [1.0, 999.0, 1.0, 999.0]
+    tier = [0, 2, 0, 1]
+    _, victim, *_ = _scan_both(st, node, [0.1] * 4, ev, 2, tier=tier)
+    np.testing.assert_array_equal(victim, [False, True, False, True])
+
+
+def test_tier_precedence_within_tier_min_ev():
+    """Within the worst class the (score, slot) key still applies: lowest
+    E_v wins, max slot breaks exact ties."""
+    R = core_state.RUNNING
+    st = [R, R, R, R]
+    node = [0, 0, 0, 0]
+    ev = [5.0, 40.0, 10.0, 10.0]
+    tier = [0, 2, 2, 2]  # prod shielded; among be: slots 2,3 tie at ev=10
+    _, victim, *_ = _scan_both(st, node, [0.1] * 4, ev, 1, tier=tier)
+    np.testing.assert_array_equal(victim, [False, False, False, True])
+
+
+def test_tier_precedence_kernel_oom_is_blind():
+    """Kernel OOM (airlock off) ignores tier entirely: largest memory dies,
+    prod or not."""
+    R = core_state.RUNNING
+    st = [R, R]
+    node = [0, 0]
+    mem = [0.3, 0.1]  # prod has the bigger footprint
+    tier = [0, 2]
+    _, victim, *_ = _scan_both(
+        st, node, mem, [1.0, 1.0], 1, airlock=False, tier=tier
+    )
+    np.testing.assert_array_equal(victim, [True, False])
+
+
+def test_tier_precedence_property_random_fields():
+    """Property: across random pressure fields, no node's victim is ever of
+    a lower tier code than another candidate on that node (jnp and
+    Pallas-interpret agree via _scan_both)."""
+    R, S = core_state.RUNNING, core_state.SUSPENDED
+    for seed in range(8):
+        rng = np.random.default_rng(1000 + seed)
+        P, N = 1200, 11
+        st = rng.choice([0, R, S], size=P, p=[0.3, 0.55, 0.15]).astype(np.int32)
+        node = np.where(rng.uniform(size=P) < 0.9, rng.integers(0, N, P), -1)
+        mem = rng.uniform(0, 0.25, P)
+        ev = rng.uniform(1.0, 256.0, P)
+        tier = rng.integers(0, 3, P)
+        pressure, victim, *_ = _scan_both(
+            st, node, mem, ev, N, tier=tier, watermark=0.9
+        )
+        cand = (st == R) & (node >= 0) & (pressure[np.clip(node, 0, N - 1)] > 0.9)
+        for n in range(N):
+            on_node = cand & (node == n)
+            if not on_node.any():
+                assert not (victim & (node == n)).any()
+                continue
+            worst = tier[on_node].max()
+            v = victim & (node == n)
+            assert v.sum() == 1
+            assert tier[v][0] == worst, f"tier precedence violated on node {n}"
+            # within the worst class, min E_v (max slot on exact ties)
+            in_class = on_node & (tier == worst)
+            assert ev[v][0] == ev[in_class].min()
